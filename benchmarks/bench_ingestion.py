@@ -1,0 +1,164 @@
+"""Paper-experiment benchmarks: one function per table/figure.
+
+  Figs 1-3, 7  -> bench_uncontrolled()   (meltdown baseline)
+  Fig 12       -> bench_controlled()     (bounded CPU at cpu_max 35%/55%)
+  Fig 13       -> bench_compression()    (ratio vs buffer, burst effect)
+  Table I/Fig11-> bench_prediction()     (model zoo fits, MAE/MSE/RMSE)
+  Fig 14       -> bench_ingestor_node()  (pipeline-side health + throughput)
+
+Each returns (rows, derived) where rows are CSV-able dicts.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.paper_ingest import IngestConfig
+from repro.core import predictor as P
+from repro.core.pipeline import IngestionPipeline
+from repro.ingest.sources import BurstyTweetSource
+
+
+def _run(uncontrolled: bool, compress: bool, cpu_max: float = 0.55,
+         ticks: int = 250, seed: int = 3, speed: float = 1.0):
+    cfg = IngestConfig(cpu_max=cpu_max)
+    src = BurstyTweetSource(seed=seed)
+    pipe = IngestionPipeline(
+        cfg, uncontrolled=uncontrolled, compress=compress,
+        spill_dir=f"/tmp/repro_bench_{uncontrolled}_{compress}_{cpu_max}",
+        consumer_speed=speed,
+    )
+    t0 = time.perf_counter()
+    rep = pipe.run(src.ticks(), max_ticks=ticks)
+    dt = time.perf_counter() - t0
+    return rep, pipe, dt
+
+
+def bench_uncontrolled() -> Tuple[List[Dict], Dict]:
+    """Figs 1-3 & 7: direct ingestion melts the consumer down."""
+    rep, pipe, dt = _run(uncontrolled=True, compress=False, speed=0.5)
+    mu = rep.samples["mu"]
+    d = {
+        "mu_mean": float(mu.mean()),
+        "mu_max": float(mu.max()),
+        "pinned_frac": float((mu > 0.95).mean()),
+        "delay_max_s": float(rep.samples["delay_s"].max()),
+        "records": rep.total_records,
+    }
+    return [d], d
+
+
+def bench_controlled() -> Tuple[List[Dict], Dict]:
+    """Fig 12: CPU bounded at cpu_max = 0.35 and 0.55."""
+    rows = []
+    for cpu_max in (0.35, 0.55):
+        rep, pipe, dt = _run(uncontrolled=False, compress=True,
+                             cpu_max=cpu_max, speed=0.5)
+        mu = rep.samples["mu"]
+        # fraction of samples above the bound + epsilon (control quality)
+        viol = float((mu > cpu_max + 0.15).mean())
+        rows.append({
+            "cpu_max": cpu_max,
+            "mu_mean": float(mu.mean()),
+            "mu_p95": float(np.percentile(mu, 95)),
+            "mu_max": float(mu.max()),
+            "violation_frac": viol,
+            "spills": rep.spill_events,
+            "drains": rep.drain_events,
+            "delay_max_s": float(rep.samples["delay_s"].max()),
+        })
+    derived = {"bounded": all(r["violation_frac"] < 0.1 for r in rows)}
+    return rows, derived
+
+
+def bench_compression() -> Tuple[List[Dict], Dict]:
+    """Fig 13: compression ratio vs effective buffer size; burst effect."""
+    rep, pipe, dt = _run(uncontrolled=False, compress=True, ticks=300)
+    crs = rep.compression_ratios
+    beta_e = rep.samples["beta_e"][: len(crs)]
+    rows = []
+    # bin by effective buffer size like the Fig 13 scatter
+    qs = np.quantile(beta_e, [0, 0.25, 0.5, 0.75, 1.0]) if len(beta_e) else []
+    for lo, hi in zip(qs[:-1], qs[1:]):
+        sel = (beta_e >= lo) & (beta_e <= hi)
+        if sel.any():
+            rows.append({
+                "beta_e_bin": f"{lo:.0f}-{hi:.0f}",
+                "cr_mean": float(crs[sel].mean()),
+                "cr_min": float(crs[sel].min()),
+                "cr_max": float(crs[sel].max()),
+                "n": int(sel.sum()),
+            })
+    derived = {
+        "mean_compression": float(crs.mean()),
+        "range": [float(np.percentile(crs, 5)), float(np.percentile(crs, 95))],
+        "paper_mean": 0.2497,
+        "paper_range": [0.15, 0.35],
+    }
+    return rows, derived
+
+
+def bench_prediction() -> Tuple[List[Dict], Dict]:
+    """Table I + Fig 11: fit every mu_exp model form on controlled-run
+    traces at three cpu_max settings, report MAE/MSE/RMSE."""
+    rows = []
+    best = {}
+    for cpu_max in (0.40, 0.50, 0.55):
+        # consumer at full speed so every setting admits enough traffic
+        # to fit on (cpu_max=0.40 at half speed throttles permanently --
+        # the paper saw the same degeneracy below cpu_max~30%, Fig 11)
+        rep, pipe, dt = _run(uncontrolled=False, compress=True,
+                             cpu_max=cpu_max, ticks=300, speed=1.0)
+        mu = rep.samples["mu"]
+        beta_e = np.maximum(rep.samples["beta_e"], 1.0)
+        mu_prev = np.concatenate([[0.0], mu[:-1]])
+        sel = beta_e > 1.0
+        if sel.sum() < 20:
+            continue
+        for name, feat in P.TABLE1_MODELS.items():
+            X = np.stack(feat(mu_prev[sel], beta_e[sel]), axis=1)
+            coef, mae, mse, rmse = P.fit_offline(X, mu[sel] * 100)  # percent, like paper
+            rows.append({
+                "model": name, "cpu_max": int(cpu_max * 100),
+                "mae": round(mae, 3), "mse": round(mse, 3), "rmse": round(rmse, 3),
+                "A": round(float(coef[0]), 4), "B": round(float(coef[1]), 4),
+                "intercept": round(float(coef[2]), 4),
+            })
+        by_model = {r["model"]: r["mae"] for r in rows if r["cpu_max"] == int(cpu_max * 100)}
+        best[int(cpu_max * 100)] = min(by_model, key=by_model.get)
+    # Eq. 2: phi2 quadratic vs linear comparison
+    rep, pipe, _ = _run(uncontrolled=False, compress=True, ticks=300)
+    rho = rep.samples["rho"]
+    dens = rep.samples["density"]
+    beta_e = rep.samples["beta_e"]
+    sel = beta_e > 1
+    Xq = np.stack([rho[sel], dens[sel] ** 2, np.ones(sel.sum())], axis=1)
+    Xl = np.stack([rho[sel], dens[sel], np.ones(sel.sum())], axis=1)
+    _, mae_q, _, _ = P.fit_offline(Xq, beta_e[sel])
+    _, mae_l, _, _ = P.fit_offline(Xl, beta_e[sel])
+    derived = {
+        "best_mu_model_per_cpu_max": best,
+        "paper_best": "a_mu_log (mu = A*mu[n-1] + B*log(beta))",
+        "eq2_phi2_quadratic_mae": round(mae_q, 2),
+        "eq2_phi2_linear_mae": round(mae_l, 2),
+    }
+    return rows, derived
+
+
+def bench_ingestor_node() -> Tuple[List[Dict], Dict]:
+    """Fig 14 + throughput: pipeline-side resource use and rates."""
+    import resource
+
+    rep, pipe, dt = _run(uncontrolled=False, compress=True, ticks=200)
+    maxrss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    rows = [{
+        "records_per_s_wall": rep.total_records / max(rep.wall_s, 1e-9),
+        "instr_per_s_wall": rep.total_instructions / max(rep.wall_s, 1e-9),
+        "maxrss_mb": round(maxrss_mb, 1),
+        "commits": len(pipe.ingestor.commits),
+        "commit_busy_mean_ms": 1e3 * float(np.mean([c.busy_s for c in pipe.ingestor.commits]))
+        if pipe.ingestor.commits else 0.0,
+    }]
+    return rows, rows[0]

@@ -1,0 +1,72 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call where timing
+is meaningful; structural benches print the primary metric instead).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only compression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+BENCHES = [
+    # (name, module, function, paper ref)
+    ("uncontrolled_meltdown", "benchmarks.bench_ingestion", "bench_uncontrolled", "Figs 1-3,7"),
+    ("controlled_bounded_cpu", "benchmarks.bench_ingestion", "bench_controlled", "Fig 12"),
+    ("graph_compression", "benchmarks.bench_ingestion", "bench_compression", "Fig 13"),
+    ("prediction_models", "benchmarks.bench_ingestion", "bench_prediction", "Table I, Fig 11"),
+    ("ingestor_node_health", "benchmarks.bench_ingestion", "bench_ingestor_node", "Fig 14"),
+    ("dedup_throughput", "benchmarks.bench_kernels", "bench_dedup_throughput", "Alg 1 hot path"),
+    ("store_ingest", "benchmarks.bench_kernels", "bench_store_ingest", "Alg 3 hot path"),
+    ("attention_paths", "benchmarks.bench_kernels", "bench_attention_paths", "LM substrate"),
+    ("ssd_chunked_speedup", "benchmarks.bench_kernels", "bench_ssd_vs_naive", "LM substrate"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, help="also dump results to file")
+    args = ap.parse_args()
+
+    import importlib
+
+    all_results = {}
+    print("name,us_per_call,derived")
+    for name, mod, fn, ref in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        rows, derived = getattr(importlib.import_module(mod), fn)()
+        us = (time.perf_counter() - t0) * 1e6
+        us_field = ""
+        if rows and "us_per_call" in rows[0]:
+            us_field = f"{rows[0]['us_per_call']}"
+        elif rows and "us_per_commit" in rows[0]:
+            us_field = f"{rows[0]['us_per_commit']}"
+        print(f"{name},{us_field},{json.dumps(derived, default=str)}")
+        for r in rows:
+            print(f"  {name}.row,,{json.dumps(r, default=str)}")
+        all_results[name] = {"rows": rows, "derived": derived, "paper_ref": ref,
+                             "bench_wall_us": us}
+    # roofline table from dry-run artifacts, if present
+    try:
+        from benchmarks.roofline import load_cells, table
+
+        cells = load_cells()
+        if cells:
+            print("\n== roofline (single-pod) ==")
+            print(table(cells, "16x16"))
+    except Exception as e:  # dry-run results absent: fine
+        print(f"(roofline table skipped: {e})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_results, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

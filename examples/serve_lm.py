@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a prompt batch, decode with KV cache.
+
+Works for any assigned arch (--arch); SSM archs decode with O(1) state.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m --gen 32
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2.5-3b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+serve_main([
+    "--arch", args.arch, "--smoke",
+    "--batch", str(args.batch),
+    "--prompt-len", "32",
+    "--gen", str(args.gen),
+])

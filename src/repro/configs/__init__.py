@@ -1,0 +1,25 @@
+"""Architecture configs. Importing this package registers every arch."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    all_arch_ids,
+    get_config,
+    register,
+    smoke_config,
+)
+
+# one module per assigned architecture (registration side-effect)
+from repro.configs import (  # noqa: F401
+    zamba2_7b,
+    mamba2_780m,
+    mixtral_8x7b,
+    qwen2_moe_a2_7b,
+    llama3_405b,
+    qwen2_5_3b,
+    stablelm_1_6b,
+    qwen3_4b,
+    phi_3_vision_4_2b,
+    whisper_medium,
+    paper_ingest,
+)

@@ -1,0 +1,298 @@
+"""Config system for the repro framework.
+
+Every assigned architecture is a `ModelConfig`; every assigned input
+shape is a `ShapeSpec`.  The dry-run, smoke tests, trainers and servers
+all consume these.  Configs are plain frozen dataclasses — no jax import
+at module scope so that importing a config never touches device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Shapes (assigned; LM shapes are seq_len x global_batch)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # attention details
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # tokens; None = full attention
+    rope_theta: float = 10_000.0
+    use_rope: bool = True  # False -> learned absolute positions (whisper)
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # hybrid (zamba2-style): shared attention+mlp block applied every N layers
+    shared_attn_every: int = 0
+
+    # encoder-decoder (whisper-style)
+    enc_layers: int = 0
+    enc_seq: int = 0  # fixed encoder positions (audio frames after conv stub)
+
+    # modality frontend stubs
+    num_patches: int = 0  # vlm: precomputed patch embeddings prepended
+
+    # norm / act
+    norm_eps: float = 1e-5
+    use_layernorm: bool = False  # False -> RMSNorm
+    act: str = "silu"  # silu (SwiGLU) | gelu (plain MLP)
+
+    # numerics / parallel policy knobs (overridable per run)
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    opt_state_dtype: str = "float32"  # adam m/v (bf16/int8 for huge models)
+    grad_accum_dtype: str = "float32"
+    # parallelism profile: "2d" = FSDP(data) x TP(model);
+    # "dp" = pure data parallel over BOTH axes + 2D-FSDP params (the
+    # right-sizing win for small models -- see EXPERIMENTS.md §Perf)
+    sharding_profile: str = "2d"
+    remat: str = "full"  # full | dots | none
+    microbatch_seqs: int = 0  # per-DP-replica seqs per microbatch; 0 = auto
+    attn_chunk: int = 1024  # online-softmax KV block for long sequences
+    use_scan_layers: bool = True
+    seq_shard_long: bool = True  # shard decode KV length over "model" axis
+    attn_full_max: int = 8192  # materialised attention up to this S (2048 = paper-faithful baseline)
+    moe_shard_map: bool = True  # per-shard-capacity MoE (False = naive SPMD baseline)
+
+    # ---------------- derived ----------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.num_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        # pad for clean sharding over the model axis (16) and MXU lanes
+        return round_up(self.vocab_size, 128)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch run the long_500k shape?"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    # ------------- parameter counting (analytic; used for 6ND) -------------
+    def _attn_params(self) -> int:
+        hd = self.resolved_head_dim
+        q = self.d_model * self.num_heads * hd
+        kv = 2 * self.d_model * self.num_kv_heads * hd
+        o = self.num_heads * hd * self.d_model
+        b = (self.num_heads + 2 * self.num_kv_heads) * hd if self.qkv_bias else 0
+        return q + kv + o + b
+
+    def _mlp_params(self, d_ff: int) -> int:
+        if self.act == "silu":
+            return 3 * self.d_model * d_ff  # SwiGLU: wi, wg, wo
+        return 2 * self.d_model * d_ff
+
+    def _mamba_params(self) -> int:
+        d_in = self.ssm_d_inner
+        nh = self.ssm_heads
+        # in_proj -> [x, z, B, C, dt]; out_proj; conv; A,D, dt_bias, norm
+        in_proj = self.d_model * (2 * d_in + 2 * self.ssm_state + nh)
+        out_proj = d_in * self.d_model
+        conv = self.ssm_conv * (d_in + 2 * self.ssm_state)
+        small = 3 * nh + d_in
+        return in_proj + out_proj + conv + small
+
+    def layer_params(self) -> Tuple[int, int]:
+        """(total_per_layer, active_per_layer) for one decoder layer."""
+        if self.family == "ssm":
+            p = self._mamba_params() + self.d_model
+            return p, p
+        attn = self._attn_params() + self.d_model  # + norm
+        if self.num_experts:
+            router = self.d_model * self.num_experts
+            experts = self.num_experts * self._mlp_params(self.moe_d_ff)
+            shared = self._mlp_params(self.shared_d_ff) if self.shared_d_ff else 0
+            total = attn + router + experts + shared + self.d_model
+            active = (
+                attn
+                + router
+                + self.num_experts_per_tok * self._mlp_params(self.moe_d_ff)
+                + shared
+                + self.d_model
+            )
+            return total, active
+        mlp = self._mlp_params(self.d_ff) + self.d_model
+        return attn + mlp, attn + mlp
+
+    def param_count(self) -> Tuple[int, int]:
+        """(total, active) parameters, embeddings included once."""
+        emb = self.padded_vocab * self.d_model
+        head = 0 if self.tie_embeddings else self.padded_vocab * self.d_model
+        total = emb + head + self.d_model  # final norm
+
+        if self.family == "hybrid":
+            per, _ = ModelConfig.layer_params(
+                dataclasses.replace(self, family="ssm")
+            )
+            total += self.num_layers * per
+            # one shared attention+mlp block (weights reused every Nth layer)
+            shared_blk = self._attn_params() + self._mlp_params(self.d_ff) + 2 * self.d_model
+            total += shared_blk
+            return total, total
+
+        per, act = self.layer_params()
+        n_dec = self.num_layers
+        total += n_dec * per
+        active = emb + head + self.d_model + n_dec * act
+
+        if self.is_encdec:
+            # encoder layers (self-attn + mlp) + decoder cross-attn additions
+            enc_per = self._attn_params() + self._mlp_params(self.d_ff) + 2 * self.d_model
+            total += self.enc_layers * enc_per
+            cross = self.num_layers * (self._attn_params() + self.d_model)
+            total += cross
+            active = total
+        return total, active
+
+    def flops_per_token(self) -> Tuple[int, int]:
+        """(6*N_total, 6*N_active) matmul FLOPs per trained token."""
+        t, a = self.param_count()
+        return 6 * t, 6 * a
+
+    def auto_microbatch(self, shape: ShapeSpec, dp: int) -> int:
+        """Sequences per microbatch per DP replica, bounded by activation heuristic."""
+        if self.microbatch_seqs:
+            return self.microbatch_seqs
+        per_dp = max(1, shape.global_batch // dp)
+        # heuristic activation budget: ~2 GiB of checkpointed layer inputs
+        layer_bytes_per_seq = (
+            (self.num_layers + self.enc_layers) * shape.seq_len * self.d_model * 2
+        )
+        budget = 2 * (1 << 30) * 16  # assume /16 model-axis seq sharding
+        mb = max(1, min(per_dp, budget // max(layer_bytes_per_seq, 1)))
+        # power of two <= mb that divides per_dp
+        while per_dp % mb:
+            mb -= 1
+        return max(1, mb)
+
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _REGISTRY:
+        # late import of the module defining it
+        import importlib
+
+        mod = arch_id.replace("-", "_").replace(".", "_")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[arch_id]
+
+
+def all_arch_ids():
+    from repro import configs  # noqa: F401  (triggers registration)
+
+    return sorted(_REGISTRY.keys())
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kw = dict(
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2)) if cfg.num_kv_heads else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        head_dim=16,
+        microbatch_seqs=2,
+        remat="none",
+        attn_chunk=32,
+    )
+    if cfg.num_experts:
+        # capacity_factor=E/K makes the smoke MoE dropless -> deterministic
+        # prefill/forward equivalence in tests
+        kw.update(num_experts=4, num_experts_per_tok=2, moe_d_ff=64, capacity_factor=2.0)
+        if cfg.num_shared_experts:
+            kw.update(num_shared_experts=1, shared_d_ff=64)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16)
+    if cfg.shared_attn_every:
+        kw.update(shared_attn_every=2)
+    if cfg.is_encdec:
+        kw.update(enc_layers=2, enc_seq=32)
+    if cfg.num_patches:
+        kw.update(num_patches=8)
+    return dataclasses.replace(cfg, **kw)

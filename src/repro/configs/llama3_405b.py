@@ -1,0 +1,29 @@
+"""llama3-405b [dense] — GQA, 128k vocab.
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+[arXiv:2407.21783]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="llama3-405b",
+        family="dense",
+        num_layers=126,
+        d_model=16384,
+        num_heads=128,
+        num_kv_heads=8,
+        d_ff=53248,
+        vocab_size=128256,
+        head_dim=128,
+        rope_theta=500_000.0,
+        # 405B on a 256-chip v5e pod (4 TB HBM): fp32 AdamW state alone is
+        # 4.9 TB — provably does not fit (see EXPERIMENTS.md §Dry-run).
+        # Production posture: bf16 params + bf16 adam moments + bf16 grad
+        # accumulation, microbatch 1.
+        param_dtype="bfloat16",
+        opt_state_dtype="bfloat16",
+        grad_accum_dtype="bfloat16",
+        microbatch_seqs=1,  # fits 2-pod HBM exactly (mb2 = +6% frac but 19.2G)
+    )
+)

@@ -1,0 +1,27 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+
+32L d_model=4096 32H (GQA kv=8) expert d_ff=14336 vocab=32000.
+[arXiv:2401.04088]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="mixtral-8x7b",
+        family="moe",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=0,  # all FFN capacity lives in the experts
+        vocab_size=32000,
+        num_experts=8,
+        num_experts_per_tok=2,
+        moe_d_ff=14336,
+        sliding_window=4096,
+        rope_theta=1_000_000.0,
+        # §Perf m8: per-shard-capacity shard_map MoE + mb=4 -> 15.4% of
+        # roofline at 9.5 GiB/dev (vs 1.8% / 193 GiB naive-SPMD baseline)
+        microbatch_seqs=4,
+    )
+)

@@ -1,0 +1,26 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (STUB).
+
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064.  The vision tower is
+a stub: input_specs() supplies precomputed patch embeddings
+(batch, num_patches, d_model) which the backbone prepends to the token
+embeddings.  [hf:microsoft/Phi-3-vision-128k-instruct]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="phi-3-vision-4.2b",
+        family="vlm",
+        num_layers=32,
+        d_model=3072,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=8192,
+        vocab_size=32064,
+        num_patches=576,  # CLIP ViT-L/14 @ 336px
+        rope_theta=10_000.0,
+        # right-sized parallelism: pure DP + 2D-FSDP beats 16-way TP for
+        # this scale (EXPERIMENTS.md §Perf q2: -87%% collective bytes)
+        sharding_profile="dp",
+    )
+)

@@ -1,0 +1,29 @@
+"""qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + 4x shared expert.
+
+24L d_model=2048 16H (GQA kv=16) expert d_ff=1408 vocab=151936.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="qwen2-moe-a2.7b",
+        family="moe",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=16,
+        d_ff=0,
+        vocab_size=151936,
+        num_experts=60,
+        num_experts_per_tok=4,
+        moe_d_ff=1408,
+        num_shared_experts=4,
+        shared_d_ff=5632,  # 4 x 1408 fused shared expert
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        # right-sized parallelism: pure DP + 2D-FSDP beats 16-way TP for
+        # this scale (EXPERIMENTS.md §Perf q2: -87%% collective bytes)
+        sharding_profile="dp",
+    )
+)

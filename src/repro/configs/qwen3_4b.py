@@ -1,0 +1,26 @@
+"""qwen3-4b [dense] — qk-norm, GQA, head_dim 128.
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936.
+[hf:Qwen/Qwen3 family]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="qwen3-4b",
+        family="dense",
+        num_layers=36,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=9728,
+        vocab_size=151936,
+        head_dim=128,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        # right-sized parallelism: pure DP + 2D-FSDP beats 16-way TP for
+        # this scale (EXPERIMENTS.md §Perf q2: -87%% collective bytes)
+        sharding_profile="dp",
+    )
+)

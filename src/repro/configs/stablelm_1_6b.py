@@ -1,0 +1,24 @@
+"""stablelm-1.6b [dense] — LayerNorm, MHA (kv=heads).
+
+24L d_model=2048 32H (kv=32) d_ff=5632 vocab=100352.
+[hf:stabilityai/stablelm-2-1_6b]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="stablelm-1.6b",
+        family="dense",
+        num_layers=24,
+        d_model=2048,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=5632,
+        vocab_size=100352,
+        use_layernorm=True,
+        qkv_bias=False,
+        # right-sized parallelism: pure DP + 2D-FSDP beats 16-way TP for
+        # this scale (EXPERIMENTS.md §Perf q2: -87%% collective bytes)
+        sharding_profile="dp",
+    )
+)

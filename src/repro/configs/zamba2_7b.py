@@ -1,0 +1,30 @@
+"""zamba2-7b [hybrid] — Mamba2 backbone + shared attention block.
+
+81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000, ssm_state=64.
+[arXiv:2411.15242]
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(
+    ModelConfig(
+        arch_id="zamba2-7b",
+        family="hybrid",
+        num_layers=81,
+        d_model=3584,
+        num_heads=32,
+        num_kv_heads=32,
+        d_ff=14336,
+        vocab_size=32000,
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        shared_attn_every=6,
+        # in the long_500k shape the shared attention block uses a sliding
+        # window so the hybrid stays sub-quadratic (see DESIGN.md §5)
+        sliding_window=None,
+        tie_embeddings=True,
+        # right-sized parallelism: pure DP + 2D-FSDP beats 16-way TP for
+        # this scale (EXPERIMENTS.md §Perf q2: -87%% collective bytes)
+        sharding_profile="dp",
+    )
+)

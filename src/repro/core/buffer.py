@@ -1,0 +1,187 @@
+"""Adaptive buffer controller — Algorithm 2 + PerfMon (§III).
+
+The controller senses three signal families, exactly as the paper:
+  * data rate: velocity (1st derivative) and acceleration (2nd),
+  * data content: bucket diversity ratio rho and graph density d
+    (from the edge table),
+  * consumer load: mu, the occupancy of the store's ingest engine
+    (the paper's Zabbix CPU-usage; here the measured busy-fraction of
+    the compiled ingest step — DESIGN.md §2).
+
+Control law (paper steps 1-7):
+  1. PerfMon predicts beta_e (Eq. 2) and mu_exp (Eq. 4/5) and the CPU
+     slope s.
+  2. mu_exp >= cpu_max            -> grow buffer by theta1 * headroom
+  3. mu_exp >= (1+theta2)*cpu_max
+     and load still rising (s>=0) -> THROTTLE: spill batch to disk
+  4. mu_exp < cpu_max             -> push to the store (GRAPHPUSH)
+  5. buffer > beta_min and calm   -> shrink by theta2 (latency recovery)
+  6. mu_exp <= theta2 * cpu_max   -> drain spilled data from disk
+  7. predictors updated online (RLS) from observed (rho, d, beta_e, mu)
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import pickle
+import time
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.paper_ingest import IngestConfig
+from repro.core import predictor as P
+
+
+@dataclasses.dataclass
+class PerfSample:
+    t: float
+    mu: float  # consumer occupancy [0,1]
+    rho: float  # bucket diversity ratio
+    density: float
+    beta: int  # current buffer size (records)
+    beta_e: float  # effective (output) buffer size
+    velocity: float  # records/s
+    accel: float
+    action: str
+    spill_depth: int
+    compression: float
+    delay_s: float = 0.0  # system delay alpha (Eq. 3): queued work at consumer
+
+
+class PerfMon:
+    """PERFMON (Alg. 2 lines 16-23): content stats + load predictions."""
+
+    def __init__(self, cfg: IngestConfig):
+        self.cfg = cfg
+        self.beta_model = P.init_beta_model(cfg.K, cfg.R)
+        self.mu_model = P.init_mu_model(cfg.A, cfg.B)
+        self.mu_hist: Deque[float] = collections.deque([0.0] * 16, maxlen=16)
+        self.rate_hist: Deque[Tuple[float, float]] = collections.deque(maxlen=16)
+        self.rho_hist: Deque[float] = collections.deque(maxlen=cfg.diversity_window)
+
+    # ---- signal ingestion ----
+    def observe_rate(self, t: float, records: float):
+        self.rate_hist.append((t, records))
+
+    def observe_mu(self, mu: float):
+        self.mu_hist.append(float(mu))
+
+    def observe_bucket(self, rho: float, density: float, beta_e: float):
+        self.rho_hist.append(float(rho))
+        # online refinement of Eq. 2 (K[i], R[i] tracked per time chunk)
+        x = P.beta_features(float(np.mean(self.rho_hist)), float(density))
+        self.beta_model = P.rls_update(self.beta_model, x, np.float32(beta_e))
+
+    def observe_mu_outcome(self, mu_prev: float, beta_e: float, mu_now: float):
+        x = P.mu_features(float(mu_prev), float(beta_e))
+        self.mu_model = P.rls_update(self.mu_model, x, np.float32(mu_now))
+
+    # ---- derived signals ----
+    def velocity(self) -> Tuple[float, float]:
+        """(records/s, d(records/s)/dt) from the rate history."""
+        if len(self.rate_hist) < 3:
+            return 0.0, 0.0
+        ts = np.asarray([t for t, _ in self.rate_hist])
+        rs = np.asarray([r for _, r in self.rate_hist])
+        dt = np.maximum(np.diff(ts), 1e-6)
+        v = rs[1:] / dt
+        vel = float(v[-1])
+        acc = float((v[-1] - v[0]) / max(ts[-1] - ts[1], 1e-6))
+        return vel, acc
+
+    def predict(self, edge_table_size: float, density: float) -> Tuple[float, float, float]:
+        """Returns (beta_e, mu_exp, slope) — Alg. 2 line 2."""
+        rho = float(np.mean(self.rho_hist)) if self.rho_hist else 1.0
+        beta_e = float(P.predict_beta_e(self.beta_model, rho, density))
+        beta_e = max(beta_e, float(edge_table_size))
+        mu_prev = self.mu_hist[-1]
+        mu_exp = float(P.predict_mu(self.mu_model, mu_prev, beta_e))
+        s = float(P.cpu_slope(np.asarray(self.mu_hist, np.float32)))
+        return beta_e, mu_exp, s
+
+
+class SpillStore:
+    """Data-throttling spill file (Alg. 2 FlushDataToDisk / LoadFromDisk)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(path, exist_ok=True)
+        self._n = 0
+        self._order: List[str] = []
+
+    def flush(self, records: list):
+        fn = os.path.join(self.path, f"spill_{self._n:08d}.pkl")
+        with open(fn, "wb") as f:
+            pickle.dump(records, f)
+        self._order.append(fn)
+        self._n += 1
+
+    def drain(self, max_batches: int = 1) -> list:
+        out = []
+        for _ in range(min(max_batches, len(self._order))):
+            fn = self._order.pop(0)
+            with open(fn, "rb") as f:
+                out.extend(pickle.load(f))
+            os.unlink(fn)
+        return out
+
+    @property
+    def depth(self) -> int:
+        return len(self._order)
+
+
+@dataclasses.dataclass
+class ControllerDecision:
+    action: str  # "push" | "hold" | "throttle" | "drain+push"
+    beta: int  # new buffer size
+    beta_e: float
+    mu_exp: float
+    slope: float
+
+
+class BufferController:
+    """Algorithm 2.  Host-side control; all heavy math jit-compiled."""
+
+    def __init__(self, cfg: IngestConfig, spill_dir: str = "/tmp/repro_spill"):
+        self.cfg = cfg
+        self.beta = cfg.beta_init
+        self.perfmon = PerfMon(cfg)
+        self.spill = SpillStore(spill_dir)
+        self.trace: List[PerfSample] = []
+
+    def decide(self, edge_table_size: float, density: float) -> ControllerDecision:
+        cfg = self.cfg
+        beta_e, mu_exp, s = self.perfmon.predict(edge_table_size, density)
+        beta = self.beta
+        action = "push"
+
+        if mu_exp >= cfg.cpu_max:
+            # step 2: high alert -- absorb by growing the buffer
+            grow = int(cfg.theta1 * (cfg.beta_max - beta))
+            if beta + grow <= cfg.beta_max:
+                beta = beta + max(grow, 1)
+            action = "hold"
+            if mu_exp >= (1.0 + cfg.theta2) * cfg.cpu_max and s >= 0.0:
+                # step 3: still rising -> data throttling to disk
+                action = "throttle"
+        else:
+            # step 4: push; step 5: recover latency by shrinking
+            if beta - cfg.theta2 * beta >= cfg.beta_min:
+                beta = int(beta - cfg.theta2 * beta)
+            action = "push"
+            if mu_exp <= cfg.theta2 * cfg.cpu_max and self.spill.depth > 0:
+                action = "drain+push"  # step 6
+
+        self.beta = max(cfg.beta_min, min(beta, cfg.beta_max))
+        return ControllerDecision(action, self.beta, beta_e, mu_exp, s)
+
+    def record(self, sample: PerfSample):
+        self.trace.append(sample)
+
+    def trace_arrays(self):
+        keys = [f.name for f in dataclasses.fields(PerfSample) if f.name != "action"]
+        return {k: np.asarray([getattr(s, k) for s in self.trace]) for k in keys}, [
+            s.action for s in self.trace
+        ]

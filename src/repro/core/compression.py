@@ -1,0 +1,131 @@
+"""Graph compression (§I, §III-B "Graph Compression", Algorithms 1+3).
+
+The paper's insight: during a burst, content is highly redundant (shared
+hashtags/users), so the redundant portion of the graph must be ingested
+only once — duplicate edges collapse into a `count` property, duplicate
+nodes are emitted once per batch.
+
+TPU adaptation (DESIGN.md §2): the paper's serial hash-map INSERTEDGE
+does pointer chasing; here dedup is *sort-based* — mix (src,dst,etype)
+into one key, sort, mark run heads, segment-sum counts — fully
+vectorised and MXU/VPU friendly.  The Pallas kernel in
+repro.kernels.edge_dedup tiles the same algorithm in VMEM; this module
+is the pure-jnp implementation (and the kernel's oracle).
+
+All functions are dtype-agnostic over the key width: uint32 in default
+jax config, uint64 under x64 (the ingestion entrypoints enable x64 for
+exact identity; see launch/ingest.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def key_dtype():
+    return jnp.uint64 if jax.config.jax_enable_x64 else jnp.uint32
+
+
+def sentinel_for(kd):
+    """All-ones key (sorts last, marks invalid)."""
+    return jnp.asarray(2**64 - 1 if kd == jnp.uint64 else 2**32 - 1, kd)
+
+
+def mix_keys(src: jax.Array, dst: jax.Array, etype: jax.Array) -> jax.Array:
+    """Combine (src, dst, etype) into one dedup key (splitmix-style)."""
+    kd = src.dtype
+    c1 = jnp.asarray(0x9E3779B97F4A7C15 if kd == jnp.uint64 else 0x9E3779B9, kd)
+    c2 = jnp.asarray(0xBF58476D1CE4E5B9 if kd == jnp.uint64 else 0x85EBCA6B, kd)
+    x = src * c1 + dst
+    x = (x ^ (x >> 30)) * c2
+    x = x ^ (x >> 27)
+    x = x + etype.astype(kd)
+    # keep the all-ones sentinel free
+    sentinel = sentinel_for(kd)
+    return jnp.where(x == sentinel, jnp.asarray(1, kd), x)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedBatch:
+    """Fixed-capacity dedup result (valid-masked)."""
+
+    keys: jax.Array  # (n,) sorted unique keys (invalid slots = sentinel)
+    counts: jax.Array  # (n,) int32 multiplicity of each unique key
+    index: jax.Array  # (n,) original position of each unique key's first hit
+    valid: jax.Array  # (n,) bool
+    n_unique: jax.Array  # scalar int32
+    n_input: jax.Array  # scalar int32 (valid inputs)
+
+    def tree_flatten(self):
+        return dataclasses.astuple(self), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def dedup_with_counts(keys: jax.Array, valid: jax.Array) -> CompressedBatch:
+    """Sort-based dedup: O(n log n), fixed shapes throughout."""
+    kd = keys.dtype
+    sentinel = sentinel_for(kd)  # all ones; sorts last
+    n = keys.shape[0]
+    masked = jnp.where(valid, keys, sentinel)
+    order = jnp.argsort(masked)
+    sk = masked[order]
+    is_valid = sk != sentinel
+    head = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]]) & is_valid
+    run = jnp.cumsum(head.astype(jnp.int32)) - 1  # run id per sorted position
+    n_unique = jnp.sum(head.astype(jnp.int32))
+    run_c = jnp.clip(run, 0, n - 1)
+    counts = jax.ops.segment_sum(is_valid.astype(jnp.int32), run_c, num_segments=n)
+    # sorted position of each run's head (dups carry value n; min -> head)
+    first_pos = jax.ops.segment_min(
+        jnp.where(head, jnp.arange(n), n), run_c, num_segments=n
+    )
+    fp = jnp.clip(first_pos, 0, n - 1)
+    uk = jnp.where(jnp.arange(n) < n_unique, sk[fp], sentinel)
+    uidx = order[fp]
+    return CompressedBatch(
+        keys=uk,
+        counts=jnp.where(jnp.arange(n) < n_unique, counts, 0),
+        index=jnp.where(jnp.arange(n) < n_unique, uidx, 0),
+        valid=jnp.arange(n) < n_unique,
+        n_unique=n_unique,
+        n_input=jnp.sum(valid.astype(jnp.int32)),
+    )
+
+
+@jax.jit
+def compress_edges(src, dst, etype, valid) -> Tuple[CompressedBatch, jax.Array]:
+    """Algorithm-1 edge compression: returns (dedup result, density).
+
+    Density d = 2|E| / (|V| (|V|-1)) over the batch (paper §III-A)."""
+    keys = mix_keys(src, dst, etype)
+    comp = dedup_with_counts(keys, valid)
+    nodes = unique_nodes(src, dst, valid)
+    v = jnp.maximum(nodes.n_unique.astype(jnp.float32), 2.0)
+    density = 2.0 * comp.n_unique.astype(jnp.float32) / (v * (v - 1.0))
+    return comp, density
+
+
+@jax.jit
+def unique_nodes(src, dst, valid) -> CompressedBatch:
+    both = jnp.concatenate([src, dst])
+    v = jnp.concatenate([valid, valid])
+    return dedup_with_counts(both, v)
+
+
+def compression_ratio(n_unique_nodes, n_unique_edges, n_raw_edges) -> jax.Array:
+    """Paper Fig. 13 metric: effective insert instructions over raw.
+
+    Raw Cypher load = one MERGE per edge endpoint pair + CREATE per edge
+    (2 node instructions + 1 edge instruction per raw edge); compressed
+    load = unique nodes + unique edges."""
+    eff = (n_unique_nodes + n_unique_edges).astype(jnp.float32)
+    raw = jnp.maximum((3 * n_raw_edges).astype(jnp.float32), 1.0)
+    return eff / raw

@@ -1,0 +1,100 @@
+"""The in-memory edge-centric structure of Algorithm 1 / Figs. 8-9.
+
+`EdgeTable` is the device-resident, fixed-capacity analogue of the
+paper's multithreaded edge table: a deduplicated edge list with a
+`count` property per edge (duplicate handling of Alg. 1 line 20), the
+indexed node list, and the table-level metadata the controller reads —
+diversity ratio, density, velocity (§III-A parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as C
+from repro.core.transform import RawEdgeBatch
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EdgeTable:
+    """Fixed-capacity deduplicated edge table + node index (device)."""
+
+    # edges
+    src: jax.Array  # (cap,) key-dtype
+    dst: jax.Array
+    etype: jax.Array  # (cap,) int32
+    count: jax.Array  # (cap,) int32   duplicate-edge multiplicity
+    edge_valid: jax.Array  # (cap,) bool
+    # node index
+    node_ids: jax.Array  # (cap,)
+    node_valid: jax.Array  # (cap,) bool
+    # metadata
+    n_edges: jax.Array  # scalar int32 (unique)
+    n_nodes: jax.Array  # scalar int32 (unique)
+    n_raw: jax.Array  # scalar int32 (pre-compression edge instructions)
+
+    def tree_flatten(self):
+        fields = dataclasses.astuple(self)
+        return fields, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ---- table-level metadata (PerfMon inputs, Alg. 2 lines 17-19) ----
+    def density(self) -> jax.Array:
+        v = jnp.maximum(self.n_nodes.astype(jnp.float32), 2.0)
+        return 2.0 * self.n_edges.astype(jnp.float32) / (v * (v - 1.0))
+
+    def size(self) -> jax.Array:
+        """PerfMon `e = edgeTable.size() + nodeIndex.size()`."""
+        return self.n_edges + self.n_nodes
+
+    def compression_ratio(self) -> jax.Array:
+        return C.compression_ratio(self.n_nodes, self.n_edges, self.n_raw)
+
+
+@jax.jit
+def build_edge_table(src, dst, etype, valid) -> EdgeTable:
+    """Model transformation output -> compressed edge table (Alg. 1)."""
+    cap = src.shape[0]
+    ecomp, _ = C.compress_edges(src, dst, etype, valid)
+    ncomp = C.unique_nodes(src, dst, valid)
+    # gather representative (src,dst,etype) of each unique edge
+    idx = ecomp.index
+    return EdgeTable(
+        src=jnp.where(ecomp.valid, src[idx], 0),
+        dst=jnp.where(ecomp.valid, dst[idx], 0),
+        etype=jnp.where(ecomp.valid, etype[idx], 0),
+        count=ecomp.counts,
+        edge_valid=ecomp.valid,
+        node_ids=ncomp.keys[:cap],
+        node_valid=ncomp.valid[:cap],
+        n_edges=ecomp.n_unique,
+        n_nodes=jnp.minimum(ncomp.n_unique, cap),
+        n_raw=ecomp.n_input,
+    )
+
+
+def from_raw_batch(raw: RawEdgeBatch, capacity: int) -> EdgeTable:
+    """Host RawEdgeBatch -> padded device arrays -> EdgeTable."""
+    kd = C.key_dtype()
+    n = min(raw.n_edges, capacity)
+    pad = capacity - n
+
+    def prep(a, dtype):
+        a = np.asarray(a[:n])
+        return jnp.concatenate(
+            [jnp.asarray(a, dtype), jnp.zeros((pad,), dtype)]
+        )
+
+    src = prep(raw.src, kd)
+    dst = prep(raw.dst, kd)
+    et = prep(raw.etype, jnp.int32)
+    valid = jnp.arange(capacity) < n
+    return build_edge_table(src, dst, et, valid)

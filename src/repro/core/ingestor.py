@@ -1,0 +1,112 @@
+"""Graph Ingestor + Commit (Algorithm 3 GRAPHPUSH).
+
+Bridges the pipeline to the graph store: converts compressed edge
+tables into store commits, respecting a bounded ingestion pool
+(the paper's bolt-connector pool), with commit-failure archiving and
+retry.  The consumer-occupancy measurement lives here: mu = busy-time
+of the ingest engine over the sampling window — the TPU-native stand-in
+for the paper's Zabbix CPU-user-time (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, List, Optional, Tuple
+
+import jax
+
+from repro.core.edge_table import EdgeTable
+from repro.graphstore.store import GraphStore, ingest_step
+
+
+@dataclasses.dataclass
+class CommitRecord:
+    t: float
+    busy_s: float
+    instructions: int
+    new_nodes: int
+    batch_nodes: int
+    ok: bool
+
+
+class GraphIngestor:
+    def __init__(self, store: GraphStore, max_pool_size: int = 4, fail_hook=None,
+                 occupancy_window: float = 10.0):
+        self.store = store
+        self.max_pool_size = max_pool_size
+        self.pool: Deque[EdgeTable] = collections.deque()
+        self.archive: List[EdgeTable] = []  # failed commits (Alg. 3 line 18)
+        self.commits: List[CommitRecord] = []
+        self.fail_hook = fail_hook  # fault injection for tests
+        self.occupancy_window = occupancy_window
+        self._busy: Deque[Tuple[float, float]] = collections.deque(maxlen=512)
+
+    # ------------------------------------------------------------------
+    def push(self, et: EdgeTable, now: Optional[float] = None) -> dict:
+        """GRAPHPUSH: pool admission + commit.  Returns commit stats."""
+        if len(self.pool) >= self.max_pool_size:
+            # pool full: hold in local memory until timeout (paper §III-B)
+            self.pool.append(et)
+            return {"committed": False, "pooled": len(self.pool)}
+        self.pool.append(et)
+        stats = {}
+        while self.pool:
+            batch = self.pool.popleft()
+            stats = self._commit(batch, now)
+            if not stats["committed"]:
+                break
+        return stats
+
+    def _commit(self, et: EdgeTable, now: Optional[float]) -> dict:
+        t0 = time.perf_counter()
+        try:
+            if self.fail_hook is not None and self.fail_hook():
+                raise ConnectionError("injected commit failure")
+            new_store, s = ingest_step(self.store, et)
+            jax.block_until_ready(new_store.n_nodes)
+            self.store = new_store
+            busy = time.perf_counter() - t0
+            wall = now if now is not None else time.time()
+            self._busy.append((wall, busy))
+            rec = CommitRecord(
+                t=wall,
+                busy_s=busy,
+                instructions=int(s["instructions"]),
+                new_nodes=int(s["new_nodes"]),
+                batch_nodes=int(s["batch_nodes"]),
+                ok=True,
+            )
+            self.commits.append(rec)
+            rho = rec.new_nodes / max(rec.batch_nodes, 1)
+            return {
+                "committed": True,
+                "stats": s,
+                "busy_s": busy,
+                "rho": rho,
+                "instructions": rec.instructions,
+            }
+        except ConnectionError:
+            # commit failed (network/DBMS) -> archive for replay
+            self.archive.append(et)
+            self.commits.append(
+                CommitRecord(now or time.time(), 0.0, 0, 0, 0, ok=False)
+            )
+            return {"committed": False, "archived": len(self.archive)}
+
+    # ------------------------------------------------------------------
+    def retry_archive(self, now: Optional[float] = None) -> int:
+        """Re-commit archived batches (connection restored)."""
+        n = 0
+        while self.archive:
+            et = self.archive.pop(0)
+            if not self._commit(et, now)["committed"]:
+                break
+            n += 1
+        return n
+
+    def occupancy(self, now: float, sim_busy: Optional[float] = None) -> float:
+        """mu in [0,1]: ingest busy-fraction over the trailing window."""
+        w0 = now - self.occupancy_window
+        busy = sum(b for (t, b) in self._busy if t >= w0)
+        return min(busy / self.occupancy_window, 1.0)

@@ -1,0 +1,149 @@
+"""Predictive models of §III-A, learned online.
+
+Two models drive the adaptive buffer controller:
+
+  Eq. 2   beta_e[i] = K[i] * phi1(rho[i]) + R[i] * phi2(d[i])
+          with phi1 linear and phi2 quadratic (paper §IV-A finding;
+          fitted K=0.597, R=1.48 on their testbed).
+
+  Eq. 4/5 mu_exp[n] = A * mu[n-1] + B * log(beta_e[n]) + c
+          (model (g) of Table I — the paper's best fit).
+
+Both are fit by jit-compiled recursive least squares (RLS) with a
+forgetting factor, so the coefficients track regime changes (bursts)
+exactly as the paper's "parameters need to be dynamically determined at
+each time chunk" requires.  The paper's offline scikit-learn fits are
+reproduced in benchmarks/bench_prediction.py using the same feature
+maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RLSState:
+    """Recursive least squares over features x: theta ~ P * x * err."""
+
+    theta: jax.Array  # (k,)
+    P: jax.Array  # (k,k) inverse covariance
+    n: jax.Array  # scalar observation count
+
+    def tree_flatten(self):
+        return (self.theta, self.P, self.n), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def rls_init(k: int, theta0=None, p0: float = 100.0) -> RLSState:
+    theta = jnp.zeros((k,), jnp.float32) if theta0 is None else jnp.asarray(theta0, jnp.float32)
+    return RLSState(theta=theta, P=jnp.eye(k, dtype=jnp.float32) * p0, n=jnp.zeros((), jnp.float32))
+
+
+@jax.jit
+def rls_update(s: RLSState, x: jax.Array, y: jax.Array, lam: float = 0.98) -> RLSState:
+    """One RLS step with forgetting factor lam."""
+    x = x.astype(jnp.float32)
+    Px = s.P @ x
+    denom = lam + x @ Px
+    k_gain = Px / denom
+    err = y - s.theta @ x
+    theta = s.theta + k_gain * err
+    P = (s.P - jnp.outer(k_gain, Px)) / lam
+    return RLSState(theta=theta, P=P, n=s.n + 1)
+
+
+@jax.jit
+def rls_predict(s: RLSState, x: jax.Array) -> jax.Array:
+    return s.theta @ x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2 — effective buffer size from content statistics
+# ---------------------------------------------------------------------------
+
+
+def beta_features(rho: float, d: float) -> jax.Array:
+    """phi1 linear in rho, phi2 quadratic in d, plus intercept."""
+    return jnp.asarray([rho, d * d, 1.0], jnp.float32)
+
+
+def init_beta_model(K: float = 0.597, R: float = 1.48) -> RLSState:
+    """Seeded with the paper's fitted coefficients."""
+    return rls_init(3, theta0=[K, R, 0.0])
+
+
+def predict_beta_e(s: RLSState, rho: float, d: float) -> jax.Array:
+    return jnp.maximum(rls_predict(s, beta_features(rho, d)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4/5 — expected consumer load from effective buffer size
+# ---------------------------------------------------------------------------
+
+
+def mu_features(mu_prev: float, beta_e: float) -> jax.Array:
+    return jnp.asarray(
+        [mu_prev, jnp.log(jnp.maximum(beta_e, 1.0)), 1.0], jnp.float32
+    )
+
+
+def init_mu_model(A: float = 0.01, B: float = 0.09, c: float = 0.0) -> RLSState:
+    """Model (g) of Table I: mu = A*mu[n-1] + B*log(beta_e) + c."""
+    return rls_init(3, theta0=[A, B, c])
+
+
+def predict_mu(s: RLSState, mu_prev: float, beta_e: float) -> jax.Array:
+    return jnp.clip(rls_predict(s, mu_features(mu_prev, beta_e)), 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# CPU-slope estimator (PerfMon's `s <- getCPUSlope()`)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("window",))
+def cpu_slope(mu_hist: jax.Array, window: int = 8) -> jax.Array:
+    """Least-squares slope of the last `window` load samples."""
+    y = mu_hist[-window:]
+    x = jnp.arange(window, dtype=jnp.float32)
+    xm = x - x.mean()
+    ym = y - y.mean()
+    return (xm @ ym) / jnp.maximum(xm @ xm, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Offline fits (Table I reproduction) — closed-form ridge on features
+# ---------------------------------------------------------------------------
+
+
+def fit_offline(xs: np.ndarray, ys: np.ndarray, ridge: float = 1e-6):
+    """Least squares fit; returns (coef, mae, mse, rmse) like Table I."""
+    xs = np.asarray(xs, np.float64)
+    ys = np.asarray(ys, np.float64)
+    k = xs.shape[1]
+    coef = np.linalg.solve(xs.T @ xs + ridge * np.eye(k), xs.T @ ys)
+    pred = xs @ coef
+    err = ys - pred
+    mae = float(np.abs(err).mean())
+    mse = float((err ** 2).mean())
+    return coef, mae, mse, float(np.sqrt(mse))
+
+
+TABLE1_MODELS = {
+    # name -> feature builder f(mu_prev, beta_e) matching Table I rows
+    "a_mu_log": lambda m, b: [m, np.log(np.maximum(b, 1.0)), np.ones_like(m)],
+    "b_mu_beta2": lambda m, b: [m, b ** 2, np.ones_like(m)],
+    "c_mu_beta": lambda m, b: [m, b, np.ones_like(m)],
+    "d_logmu_log": lambda m, b: [np.log(np.maximum(m, 1e-3)), np.log(np.maximum(b, 1.0)), np.ones_like(m)],
+    "f_mu2_log": lambda m, b: [m ** 2, np.log(np.maximum(b, 1.0)), np.ones_like(m)],
+}

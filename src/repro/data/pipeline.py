@@ -1,0 +1,108 @@
+"""Stream -> LM train-batch pipeline with double-buffered prefetch.
+
+Connects the paper's ingestion pipeline to model training: records
+flowing through the adaptive buffer are tokenized into packed LM
+sequences on a background thread while the accelerator trains on the
+previous batch.  Backpressure flows the other way: if the trainer lags,
+the ingestion buffer absorbs it (and the Algorithm-2 controller sees it
+as consumer load), so the same control law manages both the store and
+the trainer as consumers.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.data.tokenizer import HashTokenizer, PAD
+
+
+class StreamBatcher:
+    """Packs stream records into (tokens, labels) LM batches."""
+
+    def __init__(self, vocab_size: int, seq_len: int, batch_size: int):
+        self.tok = HashTokenizer(vocab_size)
+        self.seq_len = seq_len
+        self.batch_size = batch_size
+        self._carry: list = []
+
+    def _record_text(self, rec: dict) -> str:
+        tags = " ".join(rec.get("hashtags", ()))
+        ments = " ".join(rec.get("mentions", ()))
+        return f"{rec.get('user','')} {rec.get('text','')} {tags} {ments}"
+
+    def add_records(self, records) -> None:
+        self._carry.extend(self.tok.encode(self._record_text(r)) for r in records)
+
+    def ready(self) -> bool:
+        return len(self._carry) >= self.batch_size
+
+    def next_batch(self) -> Optional[dict]:
+        """Greedy packing: each row concatenates whole records."""
+        if not self.ready():
+            return None
+        rows = []
+        while len(rows) < self.batch_size and self._carry:
+            row: list = []
+            while self._carry and len(row) + len(self._carry[0]) <= self.seq_len:
+                row.extend(self._carry.pop(0))
+            if not row:  # single record longer than seq_len: truncate
+                row = self._carry.pop(0)[: self.seq_len]
+            rows.append(row)
+        if len(rows) < self.batch_size:
+            return None
+        tokens = np.full((self.batch_size, self.seq_len), PAD, np.int32)
+        for i, row in enumerate(rows):
+            tokens[i, : len(row)] = row
+        labels = np.full_like(tokens, -1)
+        labels[:, :-1] = tokens[:, 1:]
+        labels[labels == PAD] = -1
+        return {"tokens": tokens, "labels": labels}
+
+
+class PrefetchIterator:
+    """Double-buffered background prefetch (host-side pipelining)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, args=(it,), daemon=True)
+        self._thread.start()
+
+    def _fill(self, it):
+        try:
+            for x in it:
+                self.q.put(x)
+        finally:
+            self.q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        x = self.q.get()
+        if x is self._done:
+            raise StopIteration
+        return x
+
+
+def stream_batches(source_ticks, vocab_size: int, seq_len: int, batch_size: int,
+                   max_batches: Optional[int] = None) -> Iterator[dict]:
+    """records -> packed LM batches, double-buffered."""
+    def gen():
+        b = StreamBatcher(vocab_size, seq_len, batch_size)
+        n = 0
+        for tick in source_ticks:
+            b.add_records(tick.records)
+            while b.ready():
+                batch = b.next_batch()
+                if batch is None:
+                    break
+                yield batch
+                n += 1
+                if max_batches and n >= max_batches:
+                    return
+
+    return PrefetchIterator(gen())

@@ -1,0 +1,255 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Params and activations are annotated with *logical* axis names; a rule
+table maps them to mesh axes.  Resolution is divisibility-aware: a rule
+only applies when the dimension size divides the product of the mesh
+axes, otherwise the dim falls back to replicated.  This lets one rule
+table serve every assigned architecture (kv heads of 2 or 32, vocabs of
+32000 or 151936, ...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+# logical name -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: Dict[str, Any] = {
+    # --- data / batch ---
+    "batch": ("pod", "data"),
+    # --- parameter FSDP shard dim (ZeRO-3 over pod x data: cross-pod
+    #     gathers are hierarchical on real ICI/DCI) ---
+    "fsdp": ("pod", "data"),
+    # --- tensor parallel dims ---
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    # --- sequence parallelism (activations) ---
+    "seq_sp": "model",
+    # --- decode-time KV length sharding (flash-decoding style) ---
+    "kv_len": "model",
+    # --- never sharded ---
+    "layers": None,
+    "groups": None,
+    "experts": None,
+    "stack": None,
+    "conv": None,
+    "state": None,
+    "qk": None,
+    "pos": None,
+    "patch": None,
+    None: None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[Optional[str], Any], ...]
+
+    @staticmethod
+    def default(**overrides) -> "ShardingRules":
+        d = dict(DEFAULT_RULES)
+        d.update(overrides)
+        return ShardingRules(tuple(d.items()))
+
+    @staticmethod
+    def for_profile(profile: str) -> "ShardingRules":
+        """Resolve a config's sharding_profile to rules.
+
+        "2d": FSDP over data x TP over model (default; big models).
+        "dp": both mesh axes carry batch; params 2D-FSDP over
+              (data, model); no tensor-parallel collectives at all —
+              the small-model right-sizing profile (§Perf q2)."""
+        if profile == "dp":
+            return ShardingRules.default(
+                batch=("pod", "data", "model"),
+                fsdp=("pod", "data", "model"),
+                heads=None, kv_heads=None, mlp=None,
+                ssm_inner=None, ssm_heads=None,
+                # kv_len / seq_sp keep the model axis: per-tensor axis
+                # accounting means they only engage when batch could not
+                # fill both axes (prefill gb=32, decode gb=128) — context
+                # parallelism for free where DP runs out
+                vocab=None,
+            )
+        return ShardingRules.default()
+
+    def lookup(self, name: Optional[str]):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+
+def _axes_in_mesh(mesh: Mesh, axis) -> Tuple[str, ...]:
+    if axis is None:
+        return ()
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: ShardingRules,
+    dims: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for `mesh`.
+
+    If `dims` is given, sharding a dim is skipped unless the dim size is
+    divisible by the product of the mapped mesh axis sizes.
+    """
+    spec = []
+    used: set = set()
+    for i, name in enumerate(logical):
+        axes = _axes_in_mesh(mesh, rules.lookup(name))
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            spec.append(None)
+            continue
+        if dims is not None:
+            prod = int(np.prod([mesh.shape[a] for a in axes]))
+            if prod == 0 or dims[i] % prod != 0:
+                # try a prefix of the axes that divides
+                ok = ()
+                p = 1
+                for a in axes:
+                    p *= mesh.shape[a]
+                    if dims[i] % p == 0:
+                        ok = ok + (a,)
+                if not ok:
+                    spec.append(None)
+                    continue
+                axes = ok
+        used.update(axes)
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def named_sharding(
+    mesh: Mesh,
+    logical: Sequence[Optional[str]],
+    rules: ShardingRules,
+    dims: Optional[Sequence[int]] = None,
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical, mesh, rules, dims))
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (no-ops outside a mesh context)
+# ---------------------------------------------------------------------------
+
+
+_ACTIVE_RULES: list = []
+
+
+class use_rules:
+    """Context manager: activation `shard()` constraints follow these
+    rules while tracing (profile-dependent layouts)."""
+
+    def __init__(self, rules: ShardingRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *exc):
+        _ACTIVE_RULES.pop()
+
+
+def current_rules() -> ShardingRules:
+    return _ACTIVE_RULES[-1] if _ACTIVE_RULES else ShardingRules.default()
+
+
+def shard(x, logical: Sequence[Optional[str]], rules: Optional[ShardingRules] = None):
+    """with_sharding_constraint by logical names; safe without a mesh."""
+    rules = rules or current_rules()
+    try:
+        mesh = get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        spec = logical_to_spec(logical, mesh, rules, dims=x.shape)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def get_abstract_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return None
+    return m
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec: single source of truth for shapes / init / sharding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | small_normal | alog | dtbias
+    scale: float = 1.0
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def spec_avals(specs, dtype_override: Optional[str] = None):
+    import jax.numpy as jnp
+
+    def mk(s: ParamSpec):
+        dt = jnp.dtype(dtype_override or s.dtype)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return jax.tree.map(mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_shardings(specs, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    rules = rules or ShardingRules.default()
+
+    def mk(s: ParamSpec):
+        return named_sharding(mesh, s.logical, rules, dims=s.shape)
+
+    return jax.tree.map(mk, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(specs, key, dtype_override: Optional[str] = None):
+    """Materialise real parameters (smoke tests / real training)."""
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(s: ParamSpec, k):
+        dt = jnp.dtype(dtype_override or s.dtype)
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, dt)
+        if s.init == "ones":
+            return jnp.ones(s.shape, dt)
+        if s.init == "alog":  # mamba A_log init: log uniform [1,16]
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(dt)
+        if s.init == "dtbias":  # softplus^-1 of uniform dt
+            u = jax.random.uniform(k, s.shape, jnp.float32, 1e-3, 1e-1)
+            return (u + jnp.log(-jnp.expm1(-u))).astype(dt)
+        std = s.scale / max(1.0, float(s.shape[0]) ** 0.5) if s.init == "normal" else 0.02 * s.scale
+        return (jax.random.normal(k, s.shape, jnp.float32) * std).astype(dt)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])

@@ -1,0 +1,256 @@
+"""Device-resident property-graph store — the framework's "Neo4j".
+
+Open-addressing hash tables in JAX arrays (linear probing, vectorised
+over the batch; all shapes static).  The store ingests *compressed*
+edge-table batches (Algorithm 3 GRAPHPUSH): MERGE semantics for nodes
+(insert-if-absent, so ingesting the same node twice never duplicates),
+CREATE-or-count for edges (duplicate edges accumulate `count`, the
+paper's Alg. 1 line 20 semantics at store level).
+
+`ingest_step` also returns the number of *new* nodes — exactly the
+bucket-diversity signal rho the buffer controller needs (§III-A), so
+diversity costs nothing extra to compute.
+
+The distributed variant shards both tables over the `data` mesh axis by
+key ownership and exchanges entries with a single all_to_all — the
+paper's "DBMS ingestion pool" mapped onto a TPU pod (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_PROBES = 32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphStore:
+    node_keys: jax.Array  # (Ncap,) key dtype; 0 = empty
+    node_count: jax.Array  # (Ncap,) int32  (times seen, a node property)
+    node_degree: jax.Array  # (Ncap,) int32
+    edge_keys: jax.Array  # (Ecap,)
+    edge_src: jax.Array  # (Ecap,)
+    edge_dst: jax.Array  # (Ecap,)
+    edge_type: jax.Array  # (Ecap,) int32
+    edge_count: jax.Array  # (Ecap,) int32
+    n_nodes: jax.Array  # scalar int32
+    n_edges: jax.Array  # scalar int32
+
+    def tree_flatten(self):
+        return dataclasses.astuple(self), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_store(node_cap: int, edge_cap: int, key_dtype=None) -> GraphStore:
+    from repro.core.compression import key_dtype as kd_fn
+
+    kd = key_dtype or kd_fn()
+    z32 = lambda c: jnp.zeros((c,), jnp.int32)
+    zk = lambda c: jnp.zeros((c,), kd)
+    return GraphStore(
+        node_keys=zk(node_cap),
+        node_count=z32(node_cap),
+        node_degree=z32(node_cap),
+        edge_keys=zk(edge_cap),
+        edge_src=zk(edge_cap),
+        edge_dst=zk(edge_cap),
+        edge_type=z32(edge_cap),
+        edge_count=z32(edge_cap),
+        n_nodes=jnp.zeros((), jnp.int32),
+        n_edges=jnp.zeros((), jnp.int32),
+    )
+
+
+def _probe_hash(keys: jax.Array, cap: int, i: jax.Array) -> jax.Array:
+    kd = keys.dtype
+    c = jnp.asarray(0x9E3779B97F4A7C15 if kd == jnp.uint64 else 0x9E3779B9, kd)
+    h = keys * c
+    h = h ^ (h >> 16)
+    return ((h.astype(jnp.uint32) + i.astype(jnp.uint32)) % jnp.uint32(cap)).astype(jnp.int32)
+
+
+def _insert_batch(table_keys: jax.Array, keys: jax.Array, valid: jax.Array):
+    """Vectorised insert-if-absent of UNIQUE keys.
+
+    Returns (new_table_keys, slot (int32), is_new (bool)).  Batch keys
+    must be pre-deduplicated (always true: we ingest compressed batches).
+    Linear probing, MAX_PROBES rounds, scatter-max resolves races.
+    """
+    cap = table_keys.shape[0]
+    n = keys.shape[0]
+
+    def body(i, carry):
+        tk, slot, done = carry
+        cand = _probe_hash(keys, cap, jnp.full((n,), i, jnp.int32))
+        cur = tk[cand]
+        hit = (cur == keys) & valid & ~done
+        empty = (cur == 0) & valid & ~done
+        # race for empty slots: scatter-max, winners check back
+        tk = tk.at[jnp.where(empty, cand, cap)].max(keys, mode="drop")
+        won = empty & (tk[cand] == keys)
+        placed = hit | won
+        slot = jnp.where(placed, cand, slot)
+        done = done | placed
+        return tk, slot, done
+
+    slot0 = jnp.full((n,), -1, jnp.int32)
+    done0 = ~valid
+    tk, slot, done = jax.lax.fori_loop(0, MAX_PROBES, body, (table_keys, slot0, done0))
+    # is_new: slot points at our key and it wasn't a pre-existing hit --
+    # recompute: a key existed before iff some probe found cur==key before
+    # any empty. Track via membership BEFORE insert:
+    return tk, slot, done
+
+
+def _lookup_batch(table_keys: jax.Array, keys: jax.Array, valid: jax.Array):
+    """Returns (found (bool), slot (int32, -1 if absent))."""
+    cap = table_keys.shape[0]
+    n = keys.shape[0]
+
+    def body(i, carry):
+        found, slot, dead = carry
+        cand = _probe_hash(keys, cap, jnp.full((n,), i, jnp.int32))
+        cur = table_keys[cand]
+        hit = (cur == keys) & valid & ~found & ~dead
+        miss = (cur == 0) & ~found & ~dead  # empty slot: key absent
+        slot = jnp.where(hit, cand, slot)
+        return found | hit, slot, dead | miss
+
+    found0 = jnp.zeros((n,), bool)
+    slot0 = jnp.full((n,), -1, jnp.int32)
+    found, slot, _ = jax.lax.fori_loop(0, MAX_PROBES, body, (found0, slot0, jnp.zeros((n,), bool)))
+    return found, slot
+
+
+@jax.jit
+def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
+    """GRAPHPUSH (Algorithm 3): commit one compressed edge table.
+
+    Returns (store', stats) where stats carries the controller signals:
+    new-node count (diversity rho numerator), sizes, and the effective
+    instruction count actually applied."""
+    # ---- nodes: MERGE ----
+    pre_found, _ = _lookup_batch(store.node_keys, et.node_ids, et.node_valid)
+    nk, nslot, ok = _insert_batch(store.node_keys, et.node_ids, et.node_valid)
+    is_new = et.node_valid & ~pre_found & ok
+    node_count = store.node_count.at[jnp.where(et.node_valid & ok, nslot, -1)].add(
+        1, mode="drop"
+    )
+    n_new_nodes = jnp.sum(is_new.astype(jnp.int32))
+
+    # ---- edges: CREATE-or-count ----
+    from repro.core.compression import mix_keys
+
+    ekey = mix_keys(et.src, et.dst, et.etype)
+    e_pre, _ = _lookup_batch(store.edge_keys, ekey, et.edge_valid)
+    ek, eslot, eok = _insert_batch(store.edge_keys, ekey, et.edge_valid)
+    e_new = et.edge_valid & ~e_pre & eok
+    wr = jnp.where(et.edge_valid & eok, eslot, -1)
+    edge_src = store.edge_src.at[jnp.where(e_new, eslot, -1)].set(et.src, mode="drop")
+    edge_dst = store.edge_dst.at[jnp.where(e_new, eslot, -1)].set(et.dst, mode="drop")
+    edge_type = store.edge_type.at[jnp.where(e_new, eslot, -1)].set(et.etype, mode="drop")
+    edge_count = store.edge_count.at[wr].add(et.count, mode="drop")
+    n_new_edges = jnp.sum(e_new.astype(jnp.int32))
+
+    # ---- degree update (both endpoints of new edges) ----
+    sf, sslot = _lookup_batch(nk, et.src, e_new)
+    df, dslot = _lookup_batch(nk, et.dst, e_new)
+    node_degree = store.node_degree.at[jnp.where(sf, sslot, -1)].add(1, mode="drop")
+    node_degree = node_degree.at[jnp.where(df, dslot, -1)].add(1, mode="drop")
+
+    new_store = GraphStore(
+        node_keys=nk,
+        node_count=node_count,
+        node_degree=node_degree,
+        edge_keys=ek,
+        edge_src=edge_src,
+        edge_dst=edge_dst,
+        edge_type=edge_type,
+        edge_count=edge_count,
+        n_nodes=store.n_nodes + n_new_nodes,
+        n_edges=store.n_edges + n_new_edges,
+    )
+    stats = {
+        "new_nodes": n_new_nodes,
+        "new_edges": n_new_edges,
+        "batch_nodes": jnp.sum(et.node_valid.astype(jnp.int32)),
+        "batch_edges": jnp.sum(et.edge_valid.astype(jnp.int32)),
+        "instructions": n_new_nodes + jnp.sum(et.edge_valid.astype(jnp.int32)),
+        "store_nodes": new_store.n_nodes,
+        "store_edges": new_store.n_edges,
+    }
+    return new_store, stats
+
+
+# ---------------------------------------------------------------------------
+# Distributed ingest: shard by key ownership over the `data` axis
+# ---------------------------------------------------------------------------
+
+
+def make_distributed_ingest(mesh):
+    """shard_map ingest over the `data` axis: each shard owns the keys
+    with hash % D == rank; one all_to_all routes every edge to its
+    owner shard, then the local path (dedup + MERGE) runs unchanged.
+
+    This is the paper's ingestion-pool architecture mapped onto a pod
+    (DESIGN.md §2): the Bolt connector pool becomes the data-axis
+    shards, the commit becomes a compiled collective exchange.  The
+    `model` (and `pod`) axes replicate the ingest — on a real fleet
+    they run the training/serving consumers fed by this store."""
+    from jax.sharding import PartitionSpec as P
+
+    D = mesh.shape["data"]
+    other_axes = tuple(a for a in mesh.axis_names if a != "data")
+
+    def local_ingest(store, src, dst, etype, valid):
+        # src/dst/etype/valid: (n_local,) this shard's raw slice
+        own = (src % jnp.asarray(D, src.dtype)).astype(jnp.int32)
+        order = jnp.argsort(own)
+        srcs, dsts, ets, vals, owns = (
+            src[order], dst[order], etype[order], valid[order], own[order]
+        )
+        n = src.shape[0]
+        per = n // D
+        # capacity-partitioned exchange: slot i of shard r goes to shard
+        # i//per; entries landing in a foreign slice are dropped (rare:
+        # hashing balances owners), mirroring the paper's bounded pool
+        slot_owner = jnp.arange(n) // per
+        keep = vals & (owns == slot_owner)
+
+        def ex(x):
+            return jax.lax.all_to_all(x.reshape(D, per), "data", 0, 0, tiled=True).reshape(-1)
+
+        from repro.core.edge_table import build_edge_table
+
+        et = build_edge_table(ex(srcs), ex(dsts), ex(ets), ex(keep))
+        new_store, stats = ingest_step(store, et)
+        stats = {k: jax.lax.psum(v, "data") for k, v in stats.items()}
+        # store-level counters are global (replicated) across shards
+        new_store = dataclasses.replace(
+            new_store,
+            n_nodes=store.n_nodes + stats["new_nodes"],
+            n_edges=store.n_edges + stats["new_edges"],
+        )
+        return new_store, stats
+
+    store_specs = GraphStore(
+        node_keys=P("data"), node_count=P("data"), node_degree=P("data"),
+        edge_keys=P("data"), edge_src=P("data"), edge_dst=P("data"),
+        edge_type=P("data"), edge_count=P("data"),
+        n_nodes=P(), n_edges=P(),
+    )
+    return jax.shard_map(
+        local_ingest,
+        mesh=mesh,
+        in_specs=(store_specs, P("data"), P("data"), P("data"), P("data")),
+        out_specs=(store_specs, P()),
+        check_vma=False,
+    )

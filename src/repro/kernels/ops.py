@@ -1,0 +1,69 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On this CPU container every kernel runs through the Pallas interpreter
+(`interpret=True`, the validation mode); on a real TPU the same call
+sites compile the Mosaic kernels (`interpret=False`).  `ON_TPU` flips
+the default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bloom as _bloom
+from repro.kernels import edge_dedup as _dedup
+from repro.kernels import flash_attention as _flash
+from repro.kernels import ssd_scan as _ssd
+
+ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+_INTERP = not ON_TPU
+
+
+def sort_dedup(keys: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(sorted, order, head) for power-of-two uint32 key vectors."""
+    return _dedup.sort_dedup(keys, interpret=_INTERP)
+
+
+def dedup_sorted_counts(sorted_keys: jax.Array, head: jax.Array):
+    """Per-run counts from the kernel's (sorted, head) output."""
+    n = sorted_keys.shape[0]
+    run = jnp.cumsum(head) - 1
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), jnp.clip(run, 0, n - 1), num_segments=n)
+    n_unique = head.sum()
+    return counts, n_unique
+
+
+def bloom_build(keys: jax.Array, bitmap: jax.Array) -> jax.Array:
+    return _bloom.bloom_build(keys, bitmap, interpret=_INTERP)
+
+
+def bloom_probe(keys: jax.Array, bitmap: jax.Array) -> jax.Array:
+    return _bloom.bloom_probe(keys, bitmap, interpret=_INTERP)
+
+
+def bloom_diversity(keys: jax.Array, bitmap: jax.Array):
+    """(rho, new_bitmap): fraction of unseen keys + updated filter —
+    the pre-commit diversity signal for the buffer controller."""
+    hit = bloom_probe(keys, bitmap)
+    rho = 1.0 - hit.mean(dtype=jnp.float32)
+    return rho, bloom_build(keys, bitmap)
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    causal: bool = True, window: Optional[int] = None,
+    block_q: int = 512, block_k: int = 512,
+) -> jax.Array:
+    """(BH,S,d) attention; MQA/GQA callers broadcast KV beforehand."""
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=_INTERP,
+    )
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 128):
+    """(y, final_state) Mamba2 SSD over (BH,S,*) inputs."""
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=_INTERP)

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# edge_dedup oracle
+# ---------------------------------------------------------------------------
+
+
+def sort_dedup_ref(keys: jax.Array):
+    """Returns (sorted_keys, order, head_flags) — jnp sort + shift-compare."""
+    order = jnp.argsort(keys, stable=True)
+    sk = keys[order]
+    prev = jnp.concatenate([sk[:1] ^ jnp.uint32(0xFFFFFFFF), sk[:-1]])
+    head = (sk != prev).astype(jnp.int32)
+    return sk, order.astype(jnp.int32), head
+
+
+# ---------------------------------------------------------------------------
+# bloom oracle
+# ---------------------------------------------------------------------------
+
+
+def _hash_round_ref(keys, r):
+    c1 = np.uint32((0x9E3779B9 + 0x7F4A7C15 * r) & 0xFFFFFFFF)
+    c2 = np.uint32(0x85EBCA6B)
+    with np.errstate(over="ignore"):
+        x = (np.asarray(keys, np.uint32) + c1) * c2
+        x = x ^ (x >> np.uint32(13))
+        x = x * np.uint32(0xC2B2AE35)
+        return x ^ (x >> np.uint32(16))
+
+
+def bloom_build_ref(keys, bitmap, hashes: int = 4):
+    bm = np.asarray(bitmap, np.uint32).copy().reshape(-1)
+    words = bm.shape[0]
+    for r in range(hashes):
+        h = _hash_round_ref(keys, r)
+        w = (h >> np.uint32(5)) % np.uint32(words)
+        b = h % np.uint32(32)
+        for wi, bi in zip(w, b):
+            bm[int(wi)] |= np.uint32(1) << np.uint32(bi)
+    return bm.reshape(np.asarray(bitmap).shape)
+
+
+def bloom_probe_ref(keys, bitmap, hashes: int = 4):
+    bm = np.asarray(bitmap, np.uint32).reshape(-1)
+    words = bm.shape[0]
+    hit = np.ones(len(keys), np.int32)
+    for r in range(hashes):
+        h = _hash_round_ref(keys, r)
+        w = (h >> np.uint32(5)) % np.uint32(words)
+        b = h % np.uint32(32)
+        hit &= ((bm[w] >> b) & np.uint32(1)).astype(np.int32)
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# flash attention oracle (naive, materialised scores)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, causal=True, window: Optional[int] = None):
+    BH, S, d = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan oracle — wraps the model's chunked SSD (itself validated
+# against a brute-force recurrence in tests)
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int = 128):
+    """x (BH,S,p), dt (BH,S), A (BH,), B/C (BH,S,N) -> (y, final_state).
+
+    Brute-force sequential recurrence (the definition):
+      h[t] = exp(dt[t] A) h[t-1] + dt[t] B[t] x[t]^T ;  y[t] = C[t]^T h[t]
+    """
+    BH, S, p = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+
+    def per_bh(x1, dt1, a1, b1, c1):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(dtt * a1) * h + dtt * jnp.outer(bt, xt)
+            return h, ct @ h
+
+        h0 = jnp.zeros((N, p), f32)
+        hT, ys = jax.lax.scan(
+            step, h0, (x1.astype(f32), dt1.astype(f32), b1.astype(f32), c1.astype(f32))
+        )
+        return ys, hT
+
+    ys, hT = jax.vmap(per_bh)(x, dt, A.astype(f32), B, C)
+    return ys.astype(x.dtype), hT

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioning succeeds),
+  * the program fits (memory_analysis),
+  * and yields the roofline inputs (cost_analysis + collective bytes
+    parsed from the compiled HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b --shape decode_32k --multi-pod
+Writes a JSON blob per cell under results/dryrun/.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, get_config
+from repro.distributed.sharding import (
+    ShardingRules,
+    spec_avals,
+    spec_shardings,
+)
+from repro.launch.mesh import dp_size, make_production_mesh
+from repro.models import model as M
+from repro.train.trainstep import make_prefill_step, make_serve_step, make_state_specs, make_train_step
+
+# long_500k applicability: sub-quadratic archs only (DESIGN.md §5)
+LONG_OK = {"zamba2-7b", "mamba2-780m", "mixtral-8x7b"}
+
+
+def shape_adjusted_config(cfg: ModelConfig, shape_name: str, baseline: bool = False) -> ModelConfig:
+    """Per-shape config tweaks (documented in DESIGN.md)."""
+    if shape_name == "long_500k" and cfg.family == "hybrid":
+        # shared attention block runs a sliding window in the 500k shape
+        cfg = dataclasses.replace(cfg, sliding_window=4096)
+    if baseline:
+        # the paper-faithful pre-hillclimb configuration (§Perf):
+        # uniform FSDP+TP sharding, auto microbatching, chunked attention
+        # at 4k, naive-SPMD MoE dispatch
+        cfg = dataclasses.replace(
+            cfg, sharding_profile="2d", microbatch_seqs=0,
+            attn_full_max=2048, moe_shard_map=False,
+        )
+    return cfg
+
+
+def cell_supported(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return False, "full-attention arch: long_500k would be quadratic/unbounded-KV (skip per assignment)"
+    del cfg
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Dry-run of one cell
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, rules: ShardingRules = None, verbose=True, save_hlo=None, baseline=False):
+    ok, why = cell_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod, "skipped": why}
+
+    shape = SHAPES[shape_name]
+    cfg = shape_adjusted_config(get_config(arch), shape_name, baseline=baseline)
+    rules = rules or ShardingRules.for_profile(cfg.sharding_profile)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = dp_size(mesh)
+    if cfg.sharding_profile == "dp":
+        # both axes carry batch in the dp profile
+        dp = dp * mesh.shape.get("model", 1)
+        dp = min(dp, shape.global_batch)
+    t0 = time.time()
+
+    from repro.distributed.sharding import use_rules
+
+    with jax.sharding.set_mesh(mesh), use_rules(rules):
+        if shape.kind == "train":
+            state_specs = make_state_specs(cfg)
+            state_avals = spec_avals(state_specs)
+            state_sh = spec_shardings(state_specs, mesh, rules)
+            in_specs = M.input_specs(cfg, shape)
+            in_avals = spec_avals(in_specs)
+            in_sh = spec_shardings(in_specs, mesh, rules)
+            step, info = make_train_step(cfg, shape, dp)
+            jf = jax.jit(
+                step,
+                in_shardings=(state_sh, in_sh),
+                donate_argnums=(0,),
+            )
+            lowered = jf.lower(state_avals, in_avals)
+        elif shape.kind == "prefill":
+            pspecs = M.param_specs(cfg)
+            # serving runs bf16 weights (no optimizer state on the machine)
+            p_avals = spec_avals(pspecs, dtype_override=cfg.dtype)
+            p_sh = spec_shardings(pspecs, mesh, rules)
+            in_specs = M.input_specs(cfg, shape)
+            in_avals = spec_avals(in_specs)
+            in_sh = spec_shardings(in_specs, mesh, rules)
+            step = make_prefill_step(cfg)
+            jf = jax.jit(step, in_shardings=(p_sh, in_sh))
+            lowered = jf.lower(p_avals, in_avals)
+            info = {}
+        else:  # decode
+            pspecs = M.param_specs(cfg)
+            p_avals = spec_avals(pspecs, dtype_override=cfg.dtype)
+            p_sh = spec_shardings(pspecs, mesh, rules)
+            in_specs = M.input_specs(cfg, shape)
+            in_avals = spec_avals(in_specs)
+            in_sh = spec_shardings(in_specs, mesh, rules)
+            step = make_serve_step(cfg)
+            jf = jax.jit(
+                step,
+                in_shardings=(p_sh, in_sh["cache"], in_sh["tokens"], in_sh["pos"]),
+                donate_argnums=(1,),
+            )
+            lowered = jf.lower(
+                p_avals, in_avals["cache"], in_avals["tokens"], in_avals["pos"]
+            )
+            info = {}
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    if save_hlo:
+        import gzip
+
+        os.makedirs(os.path.dirname(save_hlo) or ".", exist_ok=True)
+        with gzip.open(save_hlo, "wt") as f:
+            f.write(hlo)
+    # loop-expanded (trip-count aware) totals; see hlo_analysis.py
+    from repro.launch.hlo_analysis import analyze, scores_chain_bytes
+
+    stats = analyze(hlo)
+    coll_bytes, coll_detail = stats.coll_bytes, stats.coll_detail
+    # flash-kernel projection input: HBM bytes the Pallas attention
+    # kernel keeps in VMEM (the materialised S^2 softmax chain)
+    chunk = cfg.attn_chunk if shape.seq_len > 8192 else None
+    attn_chain = (
+        scores_chain_bytes(hlo, shape.seq_len, chunk)
+        if not cfg.is_attention_free
+        else 0.0
+    )
+
+    mem_d = {
+        k: int(getattr(mem, k, 0) or 0)
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        )
+    }
+    n_chips = 512 if multi_pod else 256
+    total_p, active_p = cfg.param_count()
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        # raw XLA numbers (loop bodies counted ONCE — see hlo_analysis.py)
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        # loop-expanded per-device totals (roofline inputs)
+        "flops_per_device": stats.flops,
+        "bytes_per_device": stats.bytes,
+        "attn_chain_bytes_per_device": attn_chain,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_detail": coll_detail,
+        "bytes_detail": dict(
+            sorted((stats.bytes_detail or {}).items(), key=lambda kv: -kv[1])[:12]
+        ),
+        "memory": mem_d,
+        "params_total": total_p,
+        "params_active": active_p,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        **info,
+    }
+    if verbose:
+        print(json.dumps({k: v for k, v in res.items() if k not in ("collective_detail",)}, indent=2))
+        print("memory_analysis:", mem)
+        print("cost_analysis flops:", cost.get("flops"), "bytes:", cost.get("bytes accessed"))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--save-hlo", default=None, help="gzip the compiled HLO here")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful pre-hillclimb configuration")
+    args = ap.parse_args()
+
+    res = run_cell(args.arch, args.shape, args.multi_pod, save_hlo=args.save_hlo,
+                   baseline=args.baseline)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+    if res.get("skipped"):
+        print(f"SKIP {args.arch} x {args.shape}: {res['skipped']}")
+        return 0
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

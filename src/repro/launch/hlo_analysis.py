@@ -1,0 +1,472 @@
+"""Loop-aware analysis of compiled HLO text.
+
+XLA's HloCostAnalysis (and compiled.cost_analysis()) visits every
+computation ONCE — a `lax.scan` over 126 layers contributes its body's
+FLOPs/bytes/collectives a single time.  For the roofline we need the
+*executed* totals, so we parse the compiled HLO text, recover each while
+loop's trip count from its condition computation, and expand
+(flops, bytes, collective-bytes) recursively: total(comp) =
+direct(comp) + sum_while trip * total(body).
+
+This is validated against an analytic jaxpr-level matmul-FLOP counter
+(repro.launch.jaxpr_flops) in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|u64|s32|u16|u32|s16|s8|u8|pred|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]"
+)
+
+
+def shape_bytes(s: str) -> int:
+    """Sum bytes over every tensor shape literal appearing in `s`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
+# --------------------------------------------------------------------------
+# HLO text -> computations
+# --------------------------------------------------------------------------
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def split_computations(text: str) -> Dict[str, str]:
+    comps: Dict[str, str] = {}
+    lines = text.splitlines()
+    name = None
+    buf: List[str] = []
+    for ln in lines:
+        stripped = ln.strip()
+        m = _COMP_HDR.match(ln) if not ln.startswith(" ") else None
+        if m and not stripped.startswith("//"):
+            if name is not None:
+                comps[name] = "\n".join(buf)
+            name = m.group(1)
+            buf = []
+        elif stripped.startswith("}"):
+            if name is not None:
+                comps[name] = "\n".join(buf)
+                name = None
+                buf = []
+        elif name is not None:
+            buf.append(ln)
+    if name is not None:
+        comps[name] = "\n".join(buf)
+    return comps
+
+
+# result shape may be a tuple containing layouts and /*index=N*/ comments;
+# the op name is the first bare `word(` after the `=`
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$",
+    re.MULTILINE,
+)
+
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALL_TO_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CONST_CMP_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_DOT_DNUMS_RE = re.compile(
+    r"lhs_contracting_dims=\{([0-9,]*)\}.*?rhs_contracting_dims=\{([0-9,]*)\}"
+)
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: Optional[dict] = None
+    bytes_detail: Optional[dict] = None  # op kind -> bytes (loop-expanded)
+
+
+def _first_shape(s: str) -> Tuple[str, str]:
+    m = _SHAPE_RE.search(s)
+    return (m.group(1), m.group(2)) if m else ("f32", "")
+
+
+def _parse_operands(rest: str) -> List[str]:
+    """Operand names from the text following the opening paren."""
+    depth = 1
+    out = []
+    cur = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+    args = "".join(cur)
+    for tok in args.split(","):
+        tok = tok.strip()
+        m = re.match(r"%?([\w.\-]+)", tok)
+        if m and not _SHAPE_RE.match(tok):
+            out.append(m.group(1))
+    return out
+
+
+def analyze(text: str, entry: Optional[str] = None) -> CompStats:
+    comps = split_computations(text)
+    if not comps:
+        return CompStats()
+    # shape env per computation: op name -> full result-shape string
+    shape_env: Dict[str, Dict[str, str]] = {}
+    ops: Dict[str, List[tuple]] = {}
+    for cname, body in comps.items():
+        env: Dict[str, str] = {}
+        lst: List[tuple] = []
+        for m in _OP_RE.finditer(body):
+            name, shape_s, op, rest = m.group(1), m.group(2), m.group(3), m.group(4)
+            env[name] = shape_s
+            line_end = body.find("\n", m.end())
+            full_line = body[m.start(): line_end if line_end > 0 else len(body)]
+            lst.append((name, shape_s, op, rest, full_line))
+        shape_env[cname] = env
+        ops[cname] = lst
+
+    trip_memo: Dict[str, int] = {}
+
+    def cond_trip(cond_name: str) -> int:
+        if cond_name in trip_memo:
+            return trip_memo[cond_name]
+        body = comps.get(cond_name, "")
+        consts = [int(x) for x in _CONST_CMP_RE.findall(body)]
+        trip = max(consts) if consts else 1
+        trip_memo[cond_name] = max(trip, 1)
+        return trip_memo[cond_name]
+
+    memo: Dict[str, CompStats] = {}
+
+    def comp_stats(cname: str) -> CompStats:
+        if cname in memo:
+            return memo[cname]
+        st = CompStats(coll_detail={}, bytes_detail={})
+        memo[cname] = st  # break cycles
+        env = shape_env.get(cname, {})
+        for (name, shape_s, op, rest, line) in ops.get(cname, []):
+            if op == "while":
+                bm = _WHILE_BODY_RE.search(line)
+                cm = _WHILE_COND_RE.search(line)
+                if bm:
+                    sub = comp_stats(bm.group(1))
+                    trip = cond_trip(cm.group(1)) if cm else 1
+                    st.flops += trip * sub.flops
+                    st.bytes += trip * sub.bytes
+                    st.coll_bytes += trip * sub.coll_bytes
+                    for k, v in (sub.coll_detail or {}).items():
+                        d = st.coll_detail.setdefault(k, {"count": 0, "bytes": 0.0})
+                        d["count"] += trip * v["count"]
+                        d["bytes"] += trip * v["bytes"]
+                    for k, v in (sub.bytes_detail or {}).items():
+                        st.bytes_detail[k] = st.bytes_detail.get(k, 0.0) + trip * v
+                continue
+            if op in ("call", "fusion", "reduce", "sort", "map", "conditional", "custom-call"):
+                tm = _CALL_TO_RE.search(line)
+                if tm and op in ("call",):
+                    sub = comp_stats(tm.group(1))
+                    st.flops += sub.flops
+                    st.bytes += sub.bytes
+                    st.coll_bytes += sub.coll_bytes
+                    for k, v in (sub.coll_detail or {}).items():
+                        d = st.coll_detail.setdefault(k, {"count": 0, "bytes": 0.0})
+                        d["count"] += v["count"]
+                        d["bytes"] += v["bytes"]
+                    for k, v in (sub.bytes_detail or {}).items():
+                        st.bytes_detail[k] = st.bytes_detail.get(k, 0.0) + v
+                    continue
+            if op == "dot":
+                st.flops += _dot_flops(shape_s, rest, line, env)
+                b = _io_bytes(shape_s, rest, env)
+                st.bytes += b
+                st.bytes_detail["dot"] = st.bytes_detail.get("dot", 0.0) + b
+                continue
+            if op == "convolution":
+                # rare here (stub frontends); approximate as io bytes only
+                st.bytes += _io_bytes(shape_s, rest, env)
+                continue
+            if op in COLLECTIVES or any(op == c + "-start" for c in COLLECTIVES):
+                pass  # fall through to the collectives branch below
+            elif op not in ("parameter", "constant", "get-tuple-element", "tuple",
+                            "bitcast", "after-all", "partition-id", "replica-id",
+                            "iota", "rng-bit-generator", "all-gather-done",
+                            "all-reduce-done", "collective-permute-done"):
+                # traffic model: operands + result of every surviving op
+                # (matches XLA's bytes-accessed convention, loop-expanded)
+                b = _io_bytes(shape_s, rest, env)
+                # in-place update ops (cache writes, MoE scatter): XLA
+                # aliases the donated buffer, so the big operand and the
+                # big result are the SAME memory and only the touched
+                # slice moves.  Count io minus 2x the aliased buffer.
+                is_dus = op in ("dynamic-update-slice", "scatter") or (
+                    op == "fusion" and re.search(
+                        r'op_name="[^"]*(dynamic_update_slice|scatter)', line)
+                )
+                if is_dus:
+                    sizes = sorted(
+                        (shape_bytes(env[o]) for o in _parse_operands(rest) if o in env),
+                        reverse=True,
+                    )
+                    if sizes:
+                        b = max(b - shape_bytes(shape_s) - sizes[0], 2.0 * (sizes[1] if len(sizes) > 1 else 0))
+                st.bytes += b
+                if op == "fusion":
+                    # small dots get fused on the CPU backend; count their
+                    # FLOPs from the fusion's called computation (io bytes
+                    # stay at the fusion boundary)
+                    fm = _CALLS_RE.search(line)
+                    if fm:
+                        sub = comp_stats(fm.group(1))
+                        st.flops += sub.flops
+                key = op
+                if op == "fusion":
+                    tag = ""
+                    # CPU-backend layout artifacts first (fusion NAME)
+                    if re.match(r"%?(copy|bitcast|transpose)", name) or "bitcast_fusion" in name:
+                        tag = ":transpose"
+                    else:
+                        mm = re.search(r'metadata=\{op_name="([^"]*)"', line)
+                        if mm:
+                            nm = mm.group(1)
+                            for marker in ("transpose", "softmax", "logsumexp", "exp", "add", "mul",
+                                            "dot_general", "reduce", "dynamic_update_slice", "cumsum",
+                                            "scatter", "gather", "convert", "tanh", "erf", "rsqrt"):
+                                if marker in nm:
+                                    tag = ":" + marker
+                                    break
+                    key = op + tag
+                st.bytes_detail[key] = st.bytes_detail.get(key, 0.0) + b
+                continue
+            if op in COLLECTIVES or any(op == c + "-start" for c in COLLECTIVES):
+                base = op.replace("-start", "")
+                nbytes = shape_bytes(shape_s)
+                gm = _GROUPS_RE.search(line)
+                g = len(gm.group(1).split(",")) if gm else 2
+                if base == "all-reduce":
+                    wire = 2.0 * (g - 1) / g * nbytes
+                elif base == "all-gather":
+                    wire = (g - 1) / g * nbytes
+                elif base == "reduce-scatter":
+                    wire = (g - 1) / g * nbytes
+                elif base == "all-to-all":
+                    wire = (g - 1) / g * nbytes
+                else:
+                    wire = float(nbytes)
+                st.coll_bytes += wire
+                d = st.coll_detail.setdefault(base, {"count": 0, "bytes": 0.0})
+                d["count"] += 1
+                d["bytes"] += wire
+                b = _io_bytes(shape_s, rest, env)
+                st.bytes += b
+                st.bytes_detail[base] = st.bytes_detail.get(base, 0.0) + b
+                continue
+        return st
+
+    def _io_bytes(shape_s: str, rest: str, env: Dict[str, str]) -> float:
+        b = float(shape_bytes(shape_s))
+        for opnd in _parse_operands(rest):
+            if opnd in env:
+                b += shape_bytes(env[opnd])
+        return b
+
+    def _dot_flops(shape_s: str, rest: str, line: str, env: Dict[str, str]) -> float:
+        # result elements * 2 * contraction size
+        dt, dims = _first_shape(shape_s)
+        out_elems = shape_elems(dims)
+        m = _DOT_DNUMS_RE.search(line)
+        contract = 1
+        operands = _parse_operands(rest)
+        if m and operands:
+            lhs_dims_s = env.get(operands[0], "")
+            lm = _SHAPE_RE.search(lhs_dims_s)
+            if lm:
+                lhs_dims = [int(x) for x in lm.group(2).split(",") if x]
+                for ci in m.group(1).split(","):
+                    if ci:
+                        contract *= lhs_dims[int(ci)]
+        return 2.0 * out_elems * contract
+
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        entry_name = m.group(1) if m else max(comps, key=lambda c: len(comps[c]))
+    return comp_stats(entry_name)
+
+
+def scores_chain_bytes(text: str, seq_len: int, chunk: int = None) -> float:
+    """Loop-expanded io bytes of every op that touches an attention-score
+    -shaped tensor (*, S, S) or (*, S, kv-chunk).
+
+    This is the HBM traffic a flash-attention kernel keeps in VMEM on
+    the TPU target: the dry-run's XLA graph materialises the softmax
+    chain, the Pallas kernel (repro.kernels.flash_attention) does not.
+    Used for the 'kernelized' roofline projection (EXPERIMENTS.md)."""
+    dims = [str(seq_len)]
+    if chunk:
+        dims.append(str(chunk))
+    alts = "|".join(dims)
+    pat = re.compile(
+        rf"\[[0-9,]*{seq_len},(?:{alts})\]|\[[0-9,]*(?:{alts}),{seq_len}\]"
+    )
+    total = 0.0
+    for b, m, comp, op, meta, shapes_sig in _top_ops_iter(text):
+        if pat.search(shapes_sig):
+            total += b
+    return total
+
+
+def _top_ops_iter(text: str):
+    comps = split_computations(text)
+    shape_env = {}
+    for cname, body in comps.items():
+        env = {}
+        for m in _OP_RE.finditer(body):
+            env[m.group(1)] = m.group(2)
+        shape_env[cname] = env
+    mult = {c: 0 for c in comps}
+    m0 = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    entry = m0.group(1) if m0 else None
+    trip_cache = {}
+
+    def cond_trip(cn):
+        if cn not in trip_cache:
+            consts = [int(x) for x in _CONST_CMP_RE.findall(comps.get(cn, ""))]
+            trip_cache[cn] = max(consts) if consts else 1
+        return trip_cache[cn]
+
+    def walk(cname, m):
+        if mult.get(cname, 0) >= m:
+            return
+        mult[cname] = m
+        for ln in comps.get(cname, "").splitlines():
+            if " while(" in ln:
+                bm = _WHILE_BODY_RE.search(ln)
+                cm = _WHILE_COND_RE.search(ln)
+                if bm:
+                    walk(bm.group(1), m * (cond_trip(cm.group(1)) if cm else 1))
+            elif "to_apply=" in ln or "calls=" in ln:
+                tm = _CALL_TO_RE.search(ln) or _CALLS_RE.search(ln)
+                if tm:
+                    walk(tm.group(1), m)
+
+    if entry:
+        walk(entry, 1)
+    for cname, body in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        env = shape_env[cname]
+        for om in _OP_RE.finditer(body):
+            name, shape_s, op, rest = om.group(1), om.group(2), om.group(3), om.group(4)
+            if op in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast", "while"):
+                continue
+            b = shape_bytes(shape_s)
+            ops_sig = [shape_s]
+            for opnd in _parse_operands(rest):
+                if opnd in env:
+                    b += shape_bytes(env[opnd])
+                    ops_sig.append(env[opnd])
+            line_end = body.find("\n", om.end())
+            line = body[om.start(): line_end if line_end > 0 else len(body)]
+            meta = re.search(r'op_name="([^"]*)"', line)
+            yield (b * m, m, cname, op, (meta.group(1) if meta else name),
+                   " ".join(ops_sig))
+
+
+def top_ops(text: str, k: int = 25):
+    """Per-op loop-expanded byte contributors (profiling aid for §Perf).
+
+    Returns [(bytes, trip_multiplier, computation, op_line_prefix)]."""
+    comps = split_computations(text)
+    shape_env = {}
+    for cname, body in comps.items():
+        env = {}
+        for m in _OP_RE.finditer(body):
+            env[m.group(1)] = m.group(2)
+        shape_env[cname] = env
+
+    # per-computation loop multiplier: product of enclosing while trips
+    mult = {c: 0 for c in comps}
+    m0 = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    entry = m0.group(1) if m0 else None
+    trip_cache = {}
+
+    def cond_trip(cn):
+        if cn not in trip_cache:
+            consts = [int(x) for x in _CONST_CMP_RE.findall(comps.get(cn, ""))]
+            trip_cache[cn] = max(consts) if consts else 1
+        return trip_cache[cn]
+
+    def walk(cname, m):
+        if mult.get(cname, 0) >= m:
+            return
+        mult[cname] = m
+        for ln in comps.get(cname, "").splitlines():
+            if " while(" in ln:
+                bm = _WHILE_BODY_RE.search(ln)
+                cm = _WHILE_COND_RE.search(ln)
+                if bm:
+                    walk(bm.group(1), m * (cond_trip(cm.group(1)) if cm else 1))
+            elif "to_apply=" in ln or "calls=" in ln:
+                tm = _CALL_TO_RE.search(ln) or _CALLS_RE.search(ln)
+                if tm:
+                    walk(tm.group(1), m)
+
+    if entry:
+        walk(entry, 1)
+
+    rows = []
+    for cname, body in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        env = shape_env[cname]
+        for om in _OP_RE.finditer(body):
+            name, shape_s, op, rest = om.group(1), om.group(2), om.group(3), om.group(4)
+            if op in ("parameter", "constant", "get-tuple-element", "tuple", "bitcast"):
+                continue
+            b = shape_bytes(shape_s)
+            for opnd in _parse_operands(rest):
+                if opnd in env:
+                    b += shape_bytes(env[opnd])
+            line_end = body.find("\n", om.end())
+            line = body[om.start(): line_end if line_end > 0 else len(body)]
+            meta = re.search(r'op_name="([^"]*)"', line)
+            rows.append((b * m, m, cname, op, (meta.group(1) if meta else name)[:110]))
+    rows.sort(reverse=True)
+    return rows[:k]
+

@@ -1,0 +1,71 @@
+"""Analytic matmul-FLOP counter over a closed jaxpr.
+
+Independent cross-check of the loop-expanded HLO analysis: walks the
+jaxpr (pre-SPMD, global program), multiplying `scan` bodies by their
+trip count and counting 2*M*N*K for every dot_general.  Includes remat
+recompute (checkpointed bodies appear as additional remat scans /
+custom vjps inside the backward scan), so
+
+    useful_ratio = 6*N*D / jaxpr_flops
+
+measures remat + MoE-capacity overhead directly.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax import core as jcore
+
+
+def _aval_size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 1
+
+
+def count_eqn_dot(eqn) -> float:
+    dn = eqn.params.get("dimension_numbers")
+    (lc, rc), (lb, rb) = dn
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    contract = 1
+    for d in lc:
+        contract *= lhs.shape[d]
+    return 2.0 * _aval_size(out) * contract
+
+
+def count_jaxpr(jaxpr) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += count_eqn_dot(eqn)
+        elif prim == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            total += eqn.params["length"] * count_jaxpr(body)
+        elif prim == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            total += count_jaxpr(body)  # unknown trip; rare in our models
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            total += max(count_jaxpr(b.jaxpr) for b in branches)
+        elif prim in ("pjit", "closed_call", "core_call", "remat_call", "xla_call"):
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                total += count_jaxpr(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        elif prim == "custom_vjp_call" or prim == "custom_jvp_call":
+            inner = eqn.params.get("call_jaxpr") or eqn.params.get("fun_jaxpr")
+            if inner is not None:
+                total += count_jaxpr(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        elif prim == "remat2" or prim == "checkpoint":
+            inner = eqn.params.get("jaxpr")
+            if inner is not None:
+                total += count_jaxpr(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+    return total
+
+
+def traced_flops(fn, *avals) -> float:
+    import jax
+
+    closed = jax.make_jaxpr(fn)(*avals)
+    return count_jaxpr(closed.jaxpr)

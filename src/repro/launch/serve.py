@@ -1,0 +1,84 @@
+"""Batched serving driver: prefill a batch of prompts, then decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.data.tokenizer import HashTokenizer
+from repro.distributed.sharding import init_params
+from repro.models import model as M
+from repro.train.trainstep import make_serve_step
+
+
+def pad_cache_to(cache, total_len: int):
+    """Grow prefill caches (length=prompt) to the serving horizon."""
+    def f(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("k", "v") and x.ndim == 5:
+            pad = total_len - x.shape[2]
+            if pad > 0:
+                return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return x
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+
+    tok = HashTokenizer(cfg.vocab_size)
+    prompts = [f"user{i} says politics election vote #topic{i%3}" for i in range(args.batch)]
+    tokens = tok.encode_batch(prompts, args.prompt_len)
+    params = init_params(M.param_specs(cfg), jax.random.key(0), dtype_override=cfg.dtype)
+
+    batch = {"tokens": jnp.asarray(tokens)}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.zeros((args.batch, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+
+    t0 = time.time()
+    logits, cache = M.prefill(params, cfg, batch)
+    total = args.prompt_len + (cfg.num_patches or 0) + args.gen
+    cache = pad_cache_to(cache, total)
+    t_prefill = time.time() - t0
+
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=1)
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out_tokens = [np.asarray(next_tok)]
+    t0 = time.time()
+    pos0 = args.prompt_len + (cfg.num_patches or 0)
+    for i in range(args.gen - 1):
+        next_tok, cache = serve(params, cache, next_tok, jnp.int32(pos0 + i))
+        out_tokens.append(np.asarray(next_tok))
+    jax.block_until_ready(next_tok)
+    t_decode = time.time() - t0
+
+    gen = np.stack(out_tokens, axis=1)
+    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"prefill {args.prompt_len} toks x {args.batch} seqs: {t_prefill*1e3:.1f} ms")
+    print(f"decode  {args.gen-1} steps: {t_decode*1e3:.1f} ms  ({tps:.1f} tok/s)")
+    print("generated ids[0][:8]:", gen[0][:8].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

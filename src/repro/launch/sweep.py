@@ -1,0 +1,100 @@
+"""Run the full dry-run matrix: every (arch x shape) on both meshes.
+
+Each cell runs in a fresh subprocess (XLA locks the device count at
+first init, and per-cell isolation keeps one bad cell from killing the
+sweep).  Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+
+  PYTHONPATH=src python -m repro.launch.sweep              # all cells
+  PYTHONPATH=src python -m repro.launch.sweep --mesh pod   # single-pod only
+  PYTHONPATH=src python -m repro.launch.sweep --arch mixtral-8x7b
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "zamba2-7b",
+    "mamba2-780m",
+    "mixtral-8x7b",
+    "qwen2-moe-a2.7b",
+    "llama3-405b",
+    "qwen2.5-3b",
+    "stablelm-1.6b",
+    "qwen3-4b",
+    "phi-3-vision-4.2b",
+    "whisper-medium",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cell_path(outdir, arch, shape, multi_pod):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(outdir, f"{arch}__{shape}__{mesh}.json")
+
+
+def run_one(arch, shape, multi_pod, outdir, timeout=1200, baseline=False):
+    out = cell_path(outdir, arch, shape, multi_pod)
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--out", out,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if baseline:
+        cmd.append("--baseline")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        p = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout, env=env)
+        ok = p.returncode == 0 and os.path.exists(out)
+        err = "" if ok else (p.stderr or "")[-2000:]
+    except subprocess.TimeoutExpired:
+        ok, err = False, f"timeout after {timeout}s"
+    dt = time.time() - t0
+    return ok, dt, err
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="both")
+    ap.add_argument("--outdir", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--baseline", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else SHAPES
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                out = cell_path(args.outdir, arch, shape, mp)
+                if os.path.exists(out) and not args.force:
+                    print(f"cached  {arch} x {shape} x {'2x16x16' if mp else '16x16'}")
+                    continue
+                ok, dt, err = run_one(arch, shape, mp, args.outdir, baseline=args.baseline)
+                tag = "ok" if ok else "FAIL"
+                print(f"{tag:5s} {arch} x {shape} x {'2x16x16' if mp else '16x16'} ({dt:.0f}s)")
+                if not ok:
+                    failures.append((arch, shape, mp, err))
+                    print("      " + err.replace("\n", "\n      ")[:1500])
+    if failures:
+        print(f"\n{len(failures)} failures")
+        return 1
+    print("\nall cells green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

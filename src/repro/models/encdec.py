@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: `input_specs()`
+supplies precomputed frame embeddings (batch, enc_seq, d_model).
+Positions are sinusoidal (computed, not learned) so parameter shapes are
+independent of the run shape; noted as a deviation in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard
+from repro.models import layers as L
+from repro.models.transformer import (
+    add_leading,
+    attn_specs,
+    embed_tokens,
+    mlp_specs,
+    norm_specs,
+    unembed,
+    _maybe_remat,
+)
+
+
+def sinusoid_pos(S: int, D: int, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (D // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def enc_layer_specs(cfg: ModelConfig):
+    return {
+        "attn_norm": norm_specs(cfg, cfg.d_model),
+        "attn": attn_specs(cfg),
+        "mlp_norm": norm_specs(cfg, cfg.d_model),
+        "mlp": mlp_specs(cfg, cfg.d_ff),
+    }
+
+
+def dec_layer_specs(cfg: ModelConfig):
+    return {
+        "attn_norm": norm_specs(cfg, cfg.d_model),
+        "attn": attn_specs(cfg),
+        "cross_norm": norm_specs(cfg, cfg.d_model),
+        "cross": attn_specs(cfg),  # wq/wk/wv/wo (+biases)
+        "mlp_norm": norm_specs(cfg, cfg.d_model),
+        "mlp": mlp_specs(cfg, cfg.d_ff),
+    }
+
+
+def encdec_specs(cfg: ModelConfig):
+    V, D = cfg.padded_vocab, cfg.d_model
+    return {
+        "embed": ParamSpec((V, D), ("vocab", "fsdp"), init="small_normal"),
+        "enc_layers": add_leading(enc_layer_specs(cfg), cfg.enc_layers, "layers"),
+        "enc_final_norm": norm_specs(cfg, D),
+        "dec_layers": add_leading(dec_layer_specs(cfg), cfg.num_layers, "layers"),
+        "final_norm": norm_specs(cfg, D),
+        "head": ParamSpec((D, V), ("fsdp", "vocab")),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, enc_seq, D) precomputed conv-frontend output (stub)."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    h = h + sinusoid_pos(h.shape[1], cfg.d_model, h.dtype)[None]
+    h = shard(h, ("batch", "seq_sp", None))
+
+    def body(carry, lp):
+        x = carry
+        hn = L.apply_norm(x, lp["attn_norm"], cfg)
+        x = x + L.attention(hn, lp["attn"], cfg, causal=False)
+        hn = L.apply_norm(x, lp["mlp_norm"], cfg)
+        x = x + L.mlp(hn, lp["mlp"], cfg)
+        return shard(x, ("batch", "seq_sp", None)), None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, params["enc_layers"])
+    return L.apply_norm(h, params["enc_final_norm"], cfg)
+
+
+def _enc_kv(enc_out, lp, cfg: ModelConfig):
+    k = jnp.einsum("bsd,dmh->bsmh", enc_out, lp["cross"]["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dmh->bsmh", enc_out, lp["cross"]["wv"].astype(enc_out.dtype))
+    if cfg.qkv_bias:
+        k = k + lp["cross"]["bk"].astype(enc_out.dtype)
+        v = v + lp["cross"]["bv"].astype(enc_out.dtype)
+    return k, v
+
+
+def decode_train(params, cfg: ModelConfig, enc_out, tokens):
+    h = embed_tokens(params, cfg, tokens)
+    h = h + sinusoid_pos(h.shape[1], cfg.d_model, h.dtype)[None]
+    h = shard(h, ("batch", "seq_sp", None))
+
+    def body(carry, lp):
+        x = carry
+        hn = L.apply_norm(x, lp["attn_norm"], cfg)
+        x = x + L.attention(hn, lp["attn"], cfg)
+        hn = L.apply_norm(x, lp["cross_norm"], cfg)
+        x = x + L.cross_attention(hn, _enc_kv(enc_out, lp, cfg), lp["cross"], cfg)
+        hn = L.apply_norm(x, lp["mlp_norm"], cfg)
+        x = x + L.mlp(hn, lp["mlp"], cfg)
+        return shard(x, ("batch", "seq_sp", None)), None
+
+    h, _ = jax.lax.scan(_maybe_remat(body, cfg), h, params["dec_layers"])
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    return unembed(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+def encdec_forward(params, cfg: ModelConfig, frames, tokens):
+    enc_out = encode(params, cfg, frames)
+    return decode_train(params, cfg, enc_out, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): self-attn KV cache + precomputed cross KV
+# ---------------------------------------------------------------------------
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, context: int):
+    m, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    Ld = cfg.num_layers
+    kv = ParamSpec(
+        (Ld, batch, context, m, hd),
+        ("layers", "batch", "kv_len", "kv_heads", None),
+        init="zeros",
+        dtype=cfg.dtype,
+    )
+    cross = ParamSpec(
+        (Ld, batch, cfg.enc_seq, m, hd),
+        ("layers", "batch", "kv_len", "kv_heads", None),
+        init="zeros",
+        dtype=cfg.dtype,
+    )
+    return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross}
+
+
+def encdec_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    h = embed_tokens(params, cfg, tokens[:, None])
+    # position embedding at `pos` (sinusoidal, gathered)
+    posemb = sinusoid_pos(1, cfg.d_model, h.dtype) * 0.0 + _pos_at(pos, cfg, h.dtype)
+    h = h + posemb[None]
+
+    def sbody(carry, xs):
+        lp, ck, cv, xk, xv = xs
+        x = carry
+        hn = L.apply_norm(x, lp["attn_norm"], cfg)
+        a, ck, cv = L.decode_attention(hn, lp["attn"], cfg, ck, cv, pos)
+        x = x + a
+        hn = L.apply_norm(x, lp["cross_norm"], cfg)
+        x = x + L.cross_attention(hn, (xk, xv), lp["cross"], cfg)
+        hn = L.apply_norm(x, lp["mlp_norm"], cfg)
+        x = x + L.mlp(hn, lp["mlp"], cfg)
+        return x, (ck, cv)
+
+    h, (nk, nv) = jax.lax.scan(
+        sbody,
+        h,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+    )
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, {
+        "k": nk,
+        "v": nv,
+        "cross_k": cache["cross_k"],
+        "cross_v": cache["cross_v"],
+    }
+
+
+def _pos_at(pos, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (D // 2))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)[None, :]

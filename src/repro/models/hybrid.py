@@ -1,0 +1,183 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention+MLP block
+applied every `shared_attn_every` layers (weights reused, Zamba2's
+parameter-sharing trick).
+
+Layer layout for L layers, period G: the first (L // G) * G layers are
+scanned as (L//G) groups of [G mamba layers + shared block]; the
+remaining L %% G layers are a trailing mamba-only scan.
+Each shared-block *application* gets its own KV cache at decode time
+(weights are shared; state is not).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard
+from repro.models import layers as L
+from repro.models.ssm_lm import mamba_layer_body, mamba_layer_specs
+from repro.models.transformer import (
+    add_leading,
+    attn_specs,
+    embed_tokens,
+    mlp_specs,
+    norm_specs,
+    unembed,
+    _maybe_remat,
+)
+
+
+def _shared_block_specs(cfg: ModelConfig):
+    return {
+        "attn_norm": norm_specs(cfg, cfg.d_model),
+        "attn": attn_specs(cfg),
+        "mlp_norm": norm_specs(cfg, cfg.d_model),
+        "mlp": mlp_specs(cfg, cfg.d_ff),
+    }
+
+
+def hybrid_groups(cfg: ModelConfig):
+    g = cfg.shared_attn_every
+    return cfg.num_layers // g, cfg.num_layers % g, g
+
+
+def hybrid_specs(cfg: ModelConfig):
+    V, D = cfg.padded_vocab, cfg.d_model
+    ng, rem, g = hybrid_groups(cfg)
+    ml = mamba_layer_specs(cfg)
+    s = {
+        "embed": ParamSpec((V, D), ("vocab", "fsdp"), init="small_normal"),
+        "final_norm": norm_specs(cfg, D),
+        "groups": add_leading(add_leading(ml, g, "layers"), ng, "groups"),
+        "shared": _shared_block_specs(cfg),
+    }
+    if rem:
+        s["tail"] = add_leading(ml, rem, "layers")
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((D, V), ("fsdp", "vocab"))
+    return s
+
+
+def _shared_block(x, sp, cfg: ModelConfig, positions):
+    h = L.apply_norm(x, sp["attn_norm"], cfg)
+    x = x + L.attention(h, sp["attn"], cfg, positions=positions)
+    h = L.apply_norm(x, sp["mlp_norm"], cfg)
+    x = x + L.mlp(h, sp["mlp"], cfg)
+    return shard(x, ("batch", "seq_sp", None))
+
+
+def hybrid_forward(params, cfg: ModelConfig, tokens):
+    h = embed_tokens(params, cfg, tokens)
+    h = shard(h, ("batch", "seq_sp", None))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    mbody = _maybe_remat(lambda c, lp: (mamba_layer_body(c, lp, cfg), None), cfg)
+
+    def group_body(carry, gp):
+        x, _ = jax.lax.scan(mbody, carry, gp)
+        x = _shared_block(x, params["shared"], cfg, positions)
+        return x, None
+
+    h, _ = jax.lax.scan(_maybe_remat(group_body, cfg), h, params["groups"])
+    if "tail" in params:
+        h, _ = jax.lax.scan(mbody, h, params["tail"])
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    return unembed(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, context: int):
+    """Mamba states per layer + one KV cache per shared-block application.
+
+    In the long_500k shape the shared block runs a sliding window
+    (cfg.sliding_window set by the launcher) so the cache stays bounded.
+    """
+    ng, rem, g = hybrid_groups(cfg)
+    nh, N, p = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.ssm_d_inner + 2 * N
+    W = context if cfg.sliding_window is None else min(context, cfg.sliding_window)
+    m, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "state": ParamSpec(
+            (ng, g, batch, nh, N, p),
+            ("groups", "layers", "batch", "ssm_heads", None, None),
+            init="zeros",
+        ),
+        "conv": ParamSpec(
+            (ng, g, batch, cfg.ssm_conv - 1, conv_ch),
+            ("groups", "layers", "batch", None, None),
+            init="zeros",
+            dtype=cfg.dtype,
+        ),
+        "k": ParamSpec(
+            (ng, batch, W, m, hd),
+            ("groups", "batch", "kv_len", "kv_heads", None),
+            init="zeros",
+            dtype=cfg.dtype,
+        ),
+        "v": ParamSpec(
+            (ng, batch, W, m, hd),
+            ("groups", "batch", "kv_len", "kv_heads", None),
+            init="zeros",
+            dtype=cfg.dtype,
+        ),
+    }
+    if rem:
+        s["tail_state"] = ParamSpec(
+            (rem, batch, nh, N, p),
+            ("layers", "batch", "ssm_heads", None, None),
+            init="zeros",
+        )
+        s["tail_conv"] = ParamSpec(
+            (rem, batch, cfg.ssm_conv - 1, conv_ch),
+            ("layers", "batch", None, None),
+            init="zeros",
+            dtype=cfg.dtype,
+        )
+    return s
+
+
+def hybrid_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    from repro.models.mamba2 import mamba2_block
+
+    h = embed_tokens(params, cfg, tokens[:, None])
+
+    def mamba_step(carry, xs):
+        lp, st, cv = xs
+        hn = L.apply_norm(carry, lp["norm"], cfg)
+        y, (nst, ncv) = mamba2_block(hn, lp["mamba"], cfg, state=st, conv_cache=cv, decode=True)
+        return carry + y, (nst, ncv)
+
+    def group_step(carry, xs):
+        gp, st, cv, ck, cv_kv = xs
+        x, (nst, ncv) = jax.lax.scan(mamba_step, carry, (gp, st, cv))
+        sp = params["shared"]
+        hn = L.apply_norm(x, sp["attn_norm"], cfg)
+        a, nck, ncv_kv = L.decode_attention(hn, sp["attn"], cfg, ck, cv_kv, pos)
+        x = x + a
+        hn = L.apply_norm(x, sp["mlp_norm"], cfg)
+        x = x + L.mlp(hn, sp["mlp"], cfg)
+        return x, (nst, ncv, nck, ncv_kv)
+
+    h, (ns, nc, nk, nv) = jax.lax.scan(
+        group_step,
+        h,
+        (params["groups"], cache["state"], cache["conv"], cache["k"], cache["v"]),
+    )
+    new_cache = {"state": ns, "conv": nc, "k": nk, "v": nv}
+    if "tail" in params:
+        h, (ts, tc) = jax.lax.scan(
+            mamba_step, h, (params["tail"], cache["tail_state"], cache["tail_conv"])
+        )
+        new_cache["tail_state"] = ts
+        new_cache["tail_conv"] = tc
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,188 @@
+"""Mamba2 (SSD — state-space duality) block, chunked.
+
+Implements the SSD chunked algorithm of arXiv:2405.21060 §6: within a
+chunk the recurrence is computed as a (masked) attention-like matmul;
+across chunks a small recurrent state (nh, N, p) is carried by a scan.
+Single-token decode is the O(1) recurrent update.
+
+Layout: d_inner = expand * d_model split into nh heads of head_dim p;
+B/C are shared across heads (ngroups=1), state size N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+
+
+def _split_proj(x, p, cfg: ModelConfig):
+    """x: (B,S,D) -> z,xs (B,S,d_in), Bs,Cs (B,S,N), dt (B,S,nh)."""
+    dt_f = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(dt_f))
+    xs = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt_f))
+    Bs = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(dt_f))
+    Cs = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(dt_f))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_f))
+    return z, xs, Bs, Cs, dt
+
+
+def _causal_conv(u, w, cache=None):
+    """Depthwise causal conv1d. u: (B,S,C), w: (K,C).
+
+    If cache (B,K-1,C) is given, performs the streaming update and
+    returns (y (B,S,C), new_cache)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+        up = jnp.concatenate([pad, u], axis=1)
+    else:
+        up = jnp.concatenate([cache.astype(u.dtype), u], axis=1)
+    y = sum(up[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_cache = up[:, -(K - 1) :, :] if K > 1 else None
+    return y, new_cache
+
+
+def ssd_chunked(xh, dt, A, Bs, Cs, chunk: int, init_state=None):
+    """Chunked SSD scan (pure-jnp oracle of the Pallas ssd_scan kernel).
+
+    xh: (B,S,nh,p) inputs, dt: (B,S,nh) positive step sizes,
+    A: (nh,) negative decay rates, Bs/Cs: (B,S,N).
+    Returns (y (B,S,nh,p), final_state (B,nh,N,p)).
+    """
+    B_, S, nh, p = xh.shape
+    N = Bs.shape[-1]
+    Q = chunk
+    S0 = S
+    if S % Q:  # pad with dt=0 steps: identity state transition, no output
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        S = xh.shape[1]
+    nc = S // Q
+
+    f32 = jnp.float32
+    xh = xh.astype(f32)
+    dt = dt.astype(f32)
+    Bs = Bs.astype(f32)
+    Cs = Cs.astype(f32)
+    dA = dt * A[None, None, :]  # (B,S,nh), negative
+
+    xc = xh.reshape(B_, nc, Q, nh, p)
+    dtc = dt.reshape(B_, nc, Q, nh)
+    dAc = dA.reshape(B_, nc, Q, nh)
+    Bc = Bs.reshape(B_, nc, Q, N)
+    Cc = Cs.reshape(B_, nc, Q, N)
+
+    seg = jnp.cumsum(dAc, axis=2)  # (B,nc,Q,nh) cumulative within chunk
+    total = seg[:, :, -1, :]  # (B,nc,nh)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # L[i,j] = exp(seg_i - seg_j) * dt_j for j <= i
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of a huge positive (j>i) would be inf and poison
+    # the gradient through `where` (NaN-grad trap)
+    L = jnp.exp(jnp.where(mask, li, -1e30)) * dtc[:, :, None, :, :]
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", G, L, xc)
+
+    # ---- chunk states ----
+    # S_c = sum_j exp(total - seg_j) * dt_j * B_j x_j^T   (B,nc,nh,N,p)
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)  # (B,nc,Q,nh)
+    wts = decay_to_end * dtc  # (B,nc,Q,nh)
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", wts, Bc, xc)
+
+    # ---- inter-chunk recurrence over chunk index ----
+    def body(h, inp):
+        s_c, tot = inp  # (B,nh,N,p), (B,nh)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + s_c
+        return h_new, h  # emit state *before* this chunk
+
+    if init_state is None:
+        h0 = jnp.zeros((B_, nh, N, p), f32)
+    else:
+        h0 = init_state.astype(f32)
+    hT, h_prev = jax.lax.scan(
+        body,
+        h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,nh,N,p)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(seg)  # (B,nc,Q,nh)
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cc, decay_from_start, h_prev
+    )
+
+    y = (y_intra + y_inter).reshape(B_, S, nh, p)
+    return y[:, :S0], hT
+
+
+def ssd_decode_step(xh, dt, A, Bs, Cs, state):
+    """One-token SSD update.  xh: (B,nh,p), dt: (B,nh), Bs/Cs: (B,N),
+    state: (B,nh,N,p) -> (y (B,nh,p), new_state)."""
+    f32 = jnp.float32
+    xh, dt, Bs, Cs = (t.astype(f32) for t in (xh, dt, Bs, Cs))
+    state = state.astype(f32)
+    dA = jnp.exp(dt * A[None, :])  # (B,nh)
+    upd = jnp.einsum("bn,bhp->bhnp", Bs, xh * dt[..., None])
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cs, state)
+    return y, state
+
+
+def mamba2_block(x, p, cfg: ModelConfig, state=None, conv_cache=None, decode=False):
+    """Full Mamba2 block.  x: (B,S,D).
+
+    Train/prefill: decode=False, returns (y, (final_state, conv_cache)).
+    Decode: decode=True with S=1 and caches provided.
+    """
+    B, S, D = x.shape
+    nh = cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+    N = cfg.ssm_state
+
+    z, xs, Bs, Cs, dt = _split_proj(x, p, cfg)
+    xs = shard(xs, ("batch", None, "ssm_inner"))
+    z = shard(z, ("batch", None, "ssm_inner"))
+
+    # depthwise causal conv on [x, B, C]
+    conv_in = jnp.concatenate([xs, Bs, Cs], axis=-1)
+    new_conv_cache = None
+    if decode:
+        conv_out, new_conv_cache = _causal_conv(conv_in, p["conv_w"], conv_cache)
+    else:
+        conv_out, new_conv_cache = _causal_conv(conv_in, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., : cfg.ssm_d_inner]
+    Bs = conv_out[..., cfg.ssm_d_inner : cfg.ssm_d_inner + N]
+    Cs = conv_out[..., cfg.ssm_d_inner + N :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
+
+    xh = xs.reshape(B, S, nh, pdim)
+    if decode:
+        y1, new_state = ssd_decode_step(
+            xh[:, 0], dt[:, 0], A, Bs[:, 0], Cs[:, 0], state
+        )
+        y = y1[:, None]  # (B,1,nh,p)
+    else:
+        y, new_state = ssd_chunked(xh, dt, A, Bs, Cs, cfg.ssm_chunk, init_state=state)
+
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, cfg.ssm_d_inner).astype(x.dtype)
+
+    # gated RMSNorm then out_proj
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    out = shard(out, ("batch", "seq_sp", None))
+    return out, (new_state, new_conv_cache)

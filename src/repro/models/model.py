@@ -1,0 +1,234 @@
+"""Model facade: family dispatch for param specs, forward, loss, prefill
+and decode, plus `input_specs()` — the ShapeDtypeStruct stand-ins used by
+the multi-pod dry-run (weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import ParamSpec, shard
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return ssm_lm.ssm_lm_specs(cfg)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_specs(cfg)
+    if cfg.family == "audio":
+        return encdec.encdec_specs(cfg)
+    return transformer.lm_specs(cfg)  # dense | moe | vlm
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch: Dict):
+    if cfg.family == "ssm":
+        return ssm_lm.ssm_lm_forward(params, cfg, batch["tokens"])
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_forward(params, cfg, batch["tokens"])
+    if cfg.family == "audio":
+        return encdec.encdec_forward(params, cfg, batch["frames"], batch["tokens"])
+    return transformer.lm_forward(params, cfg, batch["tokens"], batch.get("patches"))
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict):
+    """Next-token CE with -1-masked labels; returns (loss, metrics)."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch["labels"]
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    mx = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    sub = lf - mx
+    lse = jnp.log(jnp.sum(jnp.exp(sub), axis=-1)) + mx[..., 0]
+    tgt = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - tgt
+    mask = (labels >= 0).astype(jnp.float32)
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    ce = jnp.sum(nll * mask) / ntok
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "ntok": ntok}
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict):
+    """Returns (last-token logits (B,V), decode cache)."""
+    if cfg.family == "ssm":
+        # run forward in chunked mode collecting the final state
+        return _ssm_prefill(params, cfg, batch["tokens"])
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(params, cfg, batch["tokens"])
+    if cfg.family == "audio":
+        return _encdec_prefill(params, cfg, batch["frames"], batch["tokens"])
+    return transformer.lm_prefill(params, cfg, batch["tokens"], batch.get("patches"))
+
+
+def _ssm_prefill(params, cfg: ModelConfig, tokens):
+    from repro.models import layers as L
+    from repro.models.mamba2 import mamba2_block
+
+    h = transformer.embed_tokens(params, cfg, tokens)
+    h = shard(h, ("batch", "seq_sp", None))
+
+    def body(carry, lp):
+        x = carry
+        hn = L.apply_norm(x, lp["norm"], cfg)
+        y, (st, cv) = mamba2_block(hn, lp["mamba"], cfg)
+        return x + y, (st, cv.astype(jnp.dtype(cfg.dtype)))
+
+    h, (states, convs) = jax.lax.scan(transformer._maybe_remat(body, cfg), h, params["layers"])
+    h = L.apply_norm(h[:, -1:], params["final_norm"], cfg)
+    logits = transformer.unembed(params, cfg, h)[:, 0]
+    return logits, {"state": states, "conv": convs}
+
+
+def _hybrid_prefill(params, cfg: ModelConfig, tokens):
+    from repro.models import layers as L
+    from repro.models.mamba2 import mamba2_block
+
+    h = transformer.embed_tokens(params, cfg, tokens)
+    h = shard(h, ("batch", "seq_sp", None))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def mbody(carry, lp):
+        x = carry
+        hn = L.apply_norm(x, lp["norm"], cfg)
+        y, (st, cv) = mamba2_block(hn, lp["mamba"], cfg)
+        return x + y, (st, cv.astype(jnp.dtype(cfg.dtype)))
+
+    def gbody(carry, gp):
+        x, (st, cv) = jax.lax.scan(mbody, carry, gp)
+        sp = params["shared"]
+        hn = L.apply_norm(x, sp["attn_norm"], cfg)
+        a, (k, v) = L.attention(hn, sp["attn"], cfg, positions=positions, return_kv=True)
+        x = x + a
+        hn = L.apply_norm(x, sp["mlp_norm"], cfg)
+        x = x + L.mlp(hn, sp["mlp"], cfg)
+        if cfg.sliding_window is not None and cfg.sliding_window < S:
+            k = transformer._pack_swa_cache(k, S, cfg.sliding_window)
+            v = transformer._pack_swa_cache(v, S, cfg.sliding_window)
+        k = k.astype(jnp.dtype(cfg.dtype))
+        v = v.astype(jnp.dtype(cfg.dtype))
+        return x, (st, cv, k, v)
+
+    h, (st, cv, k, v) = jax.lax.scan(
+        transformer._maybe_remat(gbody, cfg), h, params["groups"]
+    )
+    cache = {"state": st, "conv": cv, "k": k, "v": v}
+    if "tail" in params:
+        h, (ts, tc) = jax.lax.scan(mbody, h, params["tail"])
+        cache["tail_state"] = ts
+        cache["tail_conv"] = tc
+    h = L.apply_norm(h[:, -1:], params["final_norm"], cfg)
+    logits = transformer.unembed(params, cfg, h)[:, 0]
+    return logits, cache
+
+
+def _encdec_prefill(params, cfg: ModelConfig, frames, tokens):
+    from repro.models import layers as L
+
+    enc_out = encdec.encode(params, cfg, frames)
+    h = transformer.embed_tokens(params, cfg, tokens)
+    h = h + encdec.sinusoid_pos(h.shape[1], cfg.d_model, h.dtype)[None]
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        x = carry
+        hn = L.apply_norm(x, lp["attn_norm"], cfg)
+        a, (k, v) = L.attention(hn, lp["attn"], cfg, positions=positions, return_kv=True)
+        x = x + a
+        hn = L.apply_norm(x, lp["cross_norm"], cfg)
+        xk, xv = encdec._enc_kv(enc_out, lp, cfg)
+        x = x + L.cross_attention(hn, (xk, xv), lp["cross"], cfg)
+        hn = L.apply_norm(x, lp["mlp_norm"], cfg)
+        x = x + L.mlp(hn, lp["mlp"], cfg)
+        dt = jnp.dtype(cfg.dtype)
+        return x, (k.astype(dt), v.astype(dt), xk.astype(dt), xv.astype(dt))
+
+    h, (k, v, xk, xv) = jax.lax.scan(
+        transformer._maybe_remat(body, cfg), h, params["dec_layers"]
+    )
+    h = L.apply_norm(h[:, -1:], params["final_norm"], cfg)
+    logits = transformer.unembed(params, cfg, h)[:, 0]
+    return logits, {"k": k, "v": v, "cross_k": xk, "cross_v": xv}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, context: int):
+    if cfg.family == "ssm":
+        return ssm_lm.ssm_cache_specs(cfg, batch, context)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_cache_specs(cfg, batch, context)
+    if cfg.family == "audio":
+        return encdec.encdec_cache_specs(cfg, batch, context)
+    return transformer.cache_specs(cfg, batch, context)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    if cfg.family == "ssm":
+        return ssm_lm.ssm_lm_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "hybrid":
+        return hybrid.hybrid_decode_step(params, cfg, cache, tokens, pos)
+    if cfg.family == "audio":
+        return encdec.encdec_decode_step(params, cfg, cache, tokens, pos)
+    return transformer.lm_decode_step(params, cfg, cache, tokens, pos)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ParamSpec tree describing every model input for `shape`.
+
+    Used for dry-run avals AND in_shardings; materialised by the data
+    pipeline for real runs (same single source of truth)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: ParamSpec(s, ("batch", None), init="zeros", dtype="int32")
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            d = {
+                "frames": ParamSpec(
+                    (B, cfg.enc_seq, cfg.d_model), ("batch", None, None), dtype=cfg.dtype
+                ),
+                "tokens": tok((B, S)),
+            }
+        elif cfg.family == "vlm":
+            P = cfg.num_patches
+            d = {
+                "patches": ParamSpec(
+                    (B, P, cfg.d_model), ("batch", None, None), dtype=cfg.dtype
+                ),
+                "tokens": tok((B, S - P)),
+            }
+        else:
+            d = {"tokens": tok((B, S))}
+        if shape.kind == "train":
+            d["labels"] = tok((B, S))
+        return d
+
+    # decode: one new token against a seq_len-deep cache
+    d = {
+        "tokens": ParamSpec((B,), ("batch",), init="zeros", dtype="int32"),
+        "pos": ParamSpec((), (), init="zeros", dtype="int32"),
+        "cache": cache_specs(cfg, B, S),
+    }
+    return d

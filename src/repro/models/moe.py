@@ -1,0 +1,149 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+No |tokens| x |experts| one-hot matmuls: tokens are argsorted by expert
+assignment, packed into an (E, C, D) buffer (capacity C), run through a
+batched expert FFN, and combined by scatter-add.  Compiled FLOPs are
+therefore ~ active-expert FLOPs x capacity_factor, keeping the roofline
+"useful compute" ratio honest.
+
+Routing is computed in fp32.  A load-balancing auxiliary loss (Switch
+style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+
+
+def _expert_ffn(xe, p, cfg: ModelConfig):
+    """xe: (E, C, D) -> (E, C, D) batched SwiGLU."""
+    w_i = p["wi"].astype(xe.dtype)  # (E, D, F)
+    w_g = p["wg"].astype(xe.dtype)
+    w_o = p["wo"].astype(xe.dtype)  # (E, F, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_i))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w_g)
+    h = shard(h, ("experts", None, "mlp"))
+    return jnp.einsum("ecf,efd->ecd", h, w_o)
+
+
+def moe_block(x, p, cfg: ModelConfig):
+    """x: (B,S,D) -> (y (B,S,D), aux_loss scalar).
+
+    Under a mesh this runs as a shard_map with *per-data-shard capacity*:
+    each DP shard routes and packs only its own tokens (standard
+    per-device-capacity MoE).  Without this, the (E,C,D) dispatch buffer
+    has no batch dimension for SPMD to shard and XLA replicates the
+    whole expert GEMM across the data axis (measured 9x FLOP blowup —
+    EXPERIMENTS.md §Perf m2/m3)."""
+    from repro.distributed.sharding import (
+        current_rules,
+        get_abstract_mesh,
+        logical_to_spec,
+    )
+    from jax.sharding import PartitionSpec as P
+
+    mesh = get_abstract_mesh()
+    if mesh is None or not cfg.moe_shard_map:
+        return _moe_local(x, p, cfg)
+
+    rules = current_rules()
+    bspec = logical_to_spec(("batch",), mesh, rules, dims=(x.shape[0],))
+    batch_axes = bspec[0] if bspec else None
+    mlp_spec = logical_to_spec((None, "mlp"), mesh, rules, dims=(1, cfg.moe_d_ff))
+    mlp_axis = mlp_spec[1]
+
+    def wspec(leaf_name):
+        if leaf_name in ("wi", "wg"):
+            return P(None, None, mlp_axis)
+        if leaf_name == "wo":
+            return P(None, mlp_axis, None)
+        if leaf_name in ("shared_wi", "shared_wg"):
+            return P(None, mlp_axis)
+        if leaf_name == "shared_wo":
+            return P(mlp_axis, None)
+        return P(*([None] * p[leaf_name].ndim))
+
+    p_specs = {k: wspec(k) for k in p}
+    batch_axes_t = (
+        batch_axes if isinstance(batch_axes, tuple) else
+        ((batch_axes,) if batch_axes else ())
+    )
+    reduce_axes = tuple(a for a in batch_axes_t)
+
+    def body(xl, pl):
+        y, aux = _moe_local(xl, pl, cfg)
+        if mlp_axis is not None:
+            y = jax.lax.psum(y, mlp_axis)  # row-parallel expert wo
+        if reduce_axes:
+            aux = jax.lax.pmean(aux, reduce_axes)
+        return y, aux
+
+    return jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(batch_axes, None, None), p_specs),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False,
+    )(x, p)
+
+
+def _moe_local(x, p, cfg: ModelConfig):
+    """Shard-local MoE: x (B,S,D) with per-shard capacity."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum(
+        "td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- load-balance aux (Switch): E * sum_e f_e * P_e ----
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    assign = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0)
+    ce = assign / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    C = int(max(1, round(T * K / E * cfg.capacity_factor)))
+    C = min(C, T)
+    flat_expert = expert_idx.reshape(-1)  # (T*K,)
+    order = jnp.argsort(flat_expert)  # stable
+    sorted_expert = flat_expert[order]
+    # position of each routed token within its expert's slot run
+    first = jnp.searchsorted(sorted_expert, jnp.arange(E), side="left")  # (E,)
+    pos_in_e = jnp.arange(T * K) - first[sorted_expert]
+    keep = pos_in_e < C
+    dest = jnp.where(keep, sorted_expert * C + pos_in_e, E * C)  # E*C = drop slot
+
+    src_token = order // K  # original token of each routed slot
+    buf = jnp.zeros((E * C, D), xt.dtype)
+    buf = buf.at[dest].set(xt[src_token], mode="drop")
+    xe = buf.reshape(E, C, D)
+    xe = shard(xe, ("experts", None, None))
+
+    ye = _expert_ffn(xe, p, cfg).reshape(E * C, D)
+
+    # ---- combine ----
+    gathered = ye.at[dest].get(mode="fill", fill_value=0)  # (T*K, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    gates_sorted = gate_vals.reshape(-1)[order].astype(gathered.dtype)
+    y = jnp.zeros((T, D), xt.dtype)
+    y = y.at[src_token].add(gathered * gates_sorted[:, None])
+
+    # ---- shared experts (qwen2-moe style fused shared expert) ----
+    if cfg.shared_d_ff:
+        h = jax.nn.silu(jnp.einsum("td,df->tf", xt, p["shared_wi"].astype(xt.dtype)))
+        h = h * jnp.einsum("td,df->tf", xt, p["shared_wg"].astype(xt.dtype))
+        sg = jax.nn.sigmoid(
+            jnp.einsum("td,d->t", xt.astype(jnp.float32), p["shared_gate"].astype(jnp.float32))
+        ).astype(xt.dtype)
+        y = y + sg[:, None] * jnp.einsum("tf,fd->td", h, p["shared_wo"].astype(xt.dtype))
+
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,105 @@
+"""Pure-SSM (Mamba2) language model assembly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard
+from repro.models import layers as L
+from repro.models.mamba2 import mamba2_block
+from repro.models.transformer import (
+    add_leading,
+    embed_tokens,
+    norm_specs,
+    unembed,
+    _maybe_remat,
+)
+
+
+def mamba_layer_specs(cfg: ModelConfig):
+    D, d_in, N, nh = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = d_in + 2 * N
+    return {
+        "norm": norm_specs(cfg, D),
+        "mamba": {
+            "w_x": ParamSpec((D, d_in), ("fsdp", "ssm_inner")),
+            "w_z": ParamSpec((D, d_in), ("fsdp", "ssm_inner")),
+            "w_B": ParamSpec((D, N), ("fsdp", None)),
+            "w_C": ParamSpec((D, N), ("fsdp", None)),
+            "w_dt": ParamSpec((D, nh), ("fsdp", "ssm_heads")),
+            "conv_w": ParamSpec((cfg.ssm_conv, conv_ch), ("conv", None)),
+            "A_log": ParamSpec((nh,), ("ssm_heads",), init="alog"),
+            "D": ParamSpec((nh,), ("ssm_heads",), init="ones"),
+            "dt_bias": ParamSpec((nh,), ("ssm_heads",), init="dtbias"),
+            "norm": ParamSpec((d_in,), ("ssm_inner",), init="ones"),
+            "w_out": ParamSpec((d_in, D), ("ssm_inner", "fsdp")),
+        },
+    }
+
+
+def ssm_lm_specs(cfg: ModelConfig):
+    V, D = cfg.padded_vocab, cfg.d_model
+    s = {
+        "embed": ParamSpec((V, D), ("vocab", "fsdp"), init="small_normal"),
+        "final_norm": norm_specs(cfg, D),
+        "layers": add_leading(mamba_layer_specs(cfg), cfg.num_layers, "layers"),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((D, V), ("fsdp", "vocab"))
+    return s
+
+
+def mamba_layer_body(x, lp, cfg: ModelConfig):
+    h = L.apply_norm(x, lp["norm"], cfg)
+    y, _ = mamba2_block(h, lp["mamba"], cfg)
+    return x + y
+
+
+def ssm_lm_forward(params, cfg: ModelConfig, tokens):
+    h = embed_tokens(params, cfg, tokens)
+    h = shard(h, ("batch", "seq_sp", None))
+    body = _maybe_remat(lambda c, lp: (mamba_layer_body(c, lp, cfg), None), cfg)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    return unembed(params, cfg, h), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode: O(1) recurrent state per layer
+# ---------------------------------------------------------------------------
+
+
+def ssm_cache_specs(cfg: ModelConfig, batch: int, context: int):
+    del context  # state size is context-independent (the point of an SSM)
+    nh, N, p = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.ssm_d_inner + 2 * N
+    return {
+        "state": ParamSpec(
+            (cfg.num_layers, batch, nh, N, p),
+            ("layers", "batch", "ssm_heads", None, None),
+            init="zeros",
+        ),
+        "conv": ParamSpec(
+            (cfg.num_layers, batch, cfg.ssm_conv - 1, conv_ch),
+            ("layers", "batch", None, None),
+            init="zeros",
+            dtype=cfg.dtype,
+        ),
+    }
+
+
+def ssm_lm_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    del pos  # SSM decode is position-free
+    h = embed_tokens(params, cfg, tokens[:, None])
+
+    def sbody(carry, xs):
+        lp, st, cv = xs
+        hn = L.apply_norm(carry, lp["norm"], cfg)
+        y, (nst, ncv) = mamba2_block(hn, lp["mamba"], cfg, state=st, conv_cache=cv, decode=True)
+        return carry + y, (nst, ncv)
+
+    h, (ns, nc) = jax.lax.scan(sbody, h, (params["layers"], cache["state"], cache["conv"]))
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, {"state": ns, "conv": nc}

@@ -1,0 +1,288 @@
+"""Decoder-only LM assembly: param specs, scanned forward, decode step.
+
+Per-layer parameters are stacked along a leading "layers" dim and the
+layer stack is a `lax.scan` — this keeps the HLO compact enough to
+compile 126-layer 405B programs quickly, and is also what makes the
+multi-pod SPMD partitioning tractable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ParamSpec, shard
+from repro.models import layers as L
+from repro.models.moe import moe_block
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ModelConfig, d: int):
+    s = {"scale": ParamSpec((d,), (None,), init="ones")}
+    if cfg.use_layernorm:
+        s["bias"] = ParamSpec((d,), (None,), init="zeros")
+    return s
+
+
+def attn_specs(cfg: ModelConfig):
+    D, n, m, h = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((D, n, h), ("fsdp", "heads", None)),
+        "wk": ParamSpec((D, m, h), ("fsdp", "kv_heads", None)),
+        "wv": ParamSpec((D, m, h), ("fsdp", "kv_heads", None)),
+        "wo": ParamSpec((n, h, D), ("heads", None, "fsdp")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((n, h), ("heads", None), init="zeros")
+        s["bk"] = ParamSpec((m, h), ("kv_heads", None), init="zeros")
+        s["bv"] = ParamSpec((m, h), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((h,), (None,), init="ones")
+        s["k_norm"] = ParamSpec((h,), (None,), init="ones")
+    return s
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int):
+    D = cfg.d_model
+    if cfg.act == "silu":
+        return {
+            "wi": ParamSpec((D, d_ff), ("fsdp", "mlp")),
+            "wg": ParamSpec((D, d_ff), ("fsdp", "mlp")),
+            "wo": ParamSpec((d_ff, D), ("mlp", "fsdp")),
+        }
+    return {
+        "wi": ParamSpec((D, d_ff), ("fsdp", "mlp")),
+        "bi": ParamSpec((d_ff,), ("mlp",), init="zeros"),
+        "wo": ParamSpec((d_ff, D), ("mlp", "fsdp")),
+        "bo": ParamSpec((D,), (None,), init="zeros"),
+    }
+
+
+def moe_specs(cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    s = {
+        "router": ParamSpec((D, E), ("fsdp", None)),
+        "wi": ParamSpec((E, D, F), ("experts", "fsdp", "mlp")),
+        "wg": ParamSpec((E, D, F), ("experts", "fsdp", "mlp")),
+        "wo": ParamSpec((E, F, D), ("experts", "mlp", "fsdp")),
+    }
+    if cfg.shared_d_ff:
+        s["shared_wi"] = ParamSpec((D, cfg.shared_d_ff), ("fsdp", "mlp"))
+        s["shared_wg"] = ParamSpec((D, cfg.shared_d_ff), ("fsdp", "mlp"))
+        s["shared_wo"] = ParamSpec((cfg.shared_d_ff, D), ("mlp", "fsdp"))
+        s["shared_gate"] = ParamSpec((D,), (None,), init="zeros")
+    return s
+
+
+def decoder_layer_specs(cfg: ModelConfig):
+    s = {
+        "attn_norm": norm_specs(cfg, cfg.d_model),
+        "attn": attn_specs(cfg),
+        "mlp_norm": norm_specs(cfg, cfg.d_model),
+    }
+    if cfg.num_experts:
+        s["moe"] = moe_specs(cfg)
+    else:
+        s["mlp"] = mlp_specs(cfg, cfg.d_ff)
+    return s
+
+
+def add_leading(specs, n: int, name: str):
+    def f(p: ParamSpec):
+        return ParamSpec((n,) + p.shape, (name,) + p.logical, init=p.init, scale=p.scale, dtype=p.dtype)
+
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def lm_specs(cfg: ModelConfig):
+    V, D = cfg.padded_vocab, cfg.d_model
+    s = {
+        "embed": ParamSpec((V, D), ("vocab", "fsdp"), init="small_normal"),
+        "final_norm": norm_specs(cfg, D),
+        "layers": add_leading(decoder_layer_specs(cfg), cfg.num_layers, "layers"),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = ParamSpec((D, V), ("fsdp", "vocab"))
+    if cfg.num_patches:
+        s["vision_proj"] = ParamSpec((D, D), ("fsdp", None))
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def layer_body(x, lp, cfg: ModelConfig, positions=None):
+    """One decoder layer; returns (x, aux)."""
+    h = L.apply_norm(x, lp["attn_norm"], cfg)
+    x = x + L.attention(h, lp["attn"], cfg, positions=positions)
+    h = L.apply_norm(x, lp["mlp_norm"], cfg)
+    if cfg.num_experts:
+        y, aux = moe_block(h, lp["moe"], cfg)
+    else:
+        y, aux = L.mlp(h, lp["mlp"], cfg), jnp.zeros((), jnp.float32)
+    x = x + y
+    x = shard(x, ("batch", "seq_sp", None))
+    return x, aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def scan_layers(x, stacked, cfg: ModelConfig, positions=None):
+    body = _maybe_remat(
+        lambda carry, lp: layer_body(carry, lp, cfg, positions=positions), cfg
+    )
+    if not cfg.use_scan_layers:
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            x, aux = body(x, lp)
+            aux_total = aux_total + aux
+        return x, aux_total
+
+    def sbody(carry, lp):
+        x, aux = body(carry, lp)
+        return x, aux
+
+    x, auxs = jax.lax.scan(sbody, x, stacked)
+    return x, jnp.sum(auxs)
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    emb = params["embed"]
+    h = jnp.take(emb, tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return h * jnp.sqrt(float(cfg.d_model)).astype(h.dtype) if cfg.family == "audio" else h
+
+
+def unembed(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(h.dtype)  # (V, D)
+        logits = jnp.einsum("bsd,vd->bsv", h, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"].astype(h.dtype))
+    # vocab-parallel logits (Megatron-style CE); seq stays unsharded here
+    return shard(logits, ("batch", None, "vocab"))
+
+
+def lm_forward(params, cfg: ModelConfig, tokens, patches=None):
+    """tokens: (B, S_text) int32; patches: (B, P, D) precomputed embeddings
+    (vlm stub).  Returns (logits (B,S,V), aux)."""
+    h = embed_tokens(params, cfg, tokens)
+    if cfg.num_patches and patches is not None:
+        pe = jnp.einsum(
+            "bpd,de->bpe", patches.astype(h.dtype), params["vision_proj"].astype(h.dtype)
+        )
+        h = jnp.concatenate([pe, h], axis=1)
+    h = shard(h, ("batch", "seq_sp", None))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, aux = scan_layers(h, params["layers"], cfg, positions=positions)
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    return unembed(params, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, context: int):
+    """KV-cache ParamSpec tree for decode.  context = full KV length
+    (or sliding window for SWA archs)."""
+    W = context if cfg.sliding_window is None else min(context, cfg.sliding_window)
+    m, h = cfg.num_kv_heads, cfg.resolved_head_dim
+    kv = ParamSpec(
+        (cfg.num_layers, batch, W, m, h),
+        ("layers", "batch", "kv_len", "kv_heads", None),
+        init="zeros",
+        dtype=cfg.dtype,
+    )
+    return {"k": kv, "v": kv}
+
+
+def _pack_swa_cache(k, pos_end: int, W: int):
+    """Pack the last W entries of a (B,S,m,h) K/V into rolling-buffer slot
+    order so decode can continue with slot = pos % W."""
+    S = k.shape[1]
+    last = k[:, S - W :]
+    slots = (jnp.arange(S - W, S)) % W
+    buf = jnp.zeros((k.shape[0], W) + k.shape[2:], k.dtype)
+    return buf.at[:, slots].set(last)
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens, patches=None):
+    """Process the full prompt; return (last-token logits, decode cache)."""
+    h = embed_tokens(params, cfg, tokens)
+    if cfg.num_patches and patches is not None:
+        pe = jnp.einsum(
+            "bpd,de->bpe", patches.astype(h.dtype), params["vision_proj"].astype(h.dtype)
+        )
+        h = jnp.concatenate([pe, h], axis=1)
+    h = shard(h, ("batch", "seq_sp", None))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        x = carry
+        hn = L.apply_norm(x, lp["attn_norm"], cfg)
+        a, (k, v) = L.attention(hn, lp["attn"], cfg, positions=positions, return_kv=True)
+        x = x + a
+        hn = L.apply_norm(x, lp["mlp_norm"], cfg)
+        if cfg.num_experts:
+            y, _ = moe_block(hn, lp["moe"], cfg)
+        else:
+            y = L.mlp(hn, lp["mlp"], cfg)
+        x = shard(x + y, ("batch", "seq_sp", None))
+        if cfg.sliding_window is not None and cfg.sliding_window < S:
+            k = _pack_swa_cache(k, S, cfg.sliding_window)
+            v = _pack_swa_cache(v, S, cfg.sliding_window)
+        k = shard(k.astype(jnp.dtype(cfg.dtype)), ("batch", "kv_len", "kv_heads", None))
+        v = shard(v.astype(jnp.dtype(cfg.dtype)), ("batch", "kv_len", "kv_heads", None))
+        return x, (k, v)
+
+    h, (ck, cv) = jax.lax.scan(_maybe_remat(body, cfg), h, params["layers"])
+    h = L.apply_norm(h[:, -1:], params["final_norm"], cfg)
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, {"k": ck, "v": cv}
+
+
+def layer_decode(x, lp, cfg: ModelConfig, ck, cv, pos):
+    h = L.apply_norm(x, lp["attn_norm"], cfg)
+    a, ck, cv = L.decode_attention(h, lp["attn"], cfg, ck, cv, pos)
+    x = x + a
+    h = L.apply_norm(x, lp["mlp_norm"], cfg)
+    if cfg.num_experts:
+        y, _ = moe_block(h, lp["moe"], cfg)
+    else:
+        y = L.mlp(h, lp["mlp"], cfg)
+    return x + y, ck, cv
+
+
+def lm_decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (B,) int32, pos: scalar int32 position being written.
+    Returns (logits (B,V), new_cache)."""
+    h = embed_tokens(params, cfg, tokens[:, None])
+
+    def sbody(carry, xs):
+        lp, ck, cv = xs
+        x, ck, cv = layer_decode(carry, lp, cfg, ck, cv, pos)
+        return x, (ck, cv)
+
+    h, (nk, nv) = jax.lax.scan(sbody, h, (params["layers"], cache["k"], cache["v"]))
+    h = L.apply_norm(h, params["final_norm"], cfg)
+    logits = unembed(params, cfg, h)[:, 0]
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,62 @@
+"""Batched serving loop: continuous decode over a request batch.
+
+`BatchServer` owns params + cache and exposes the two compiled entry
+points (`prefill`, `step`); requests are admitted in batches (the
+serving analogue of the paper's mini-batch commit) and decode proceeds
+lock-step across the batch — the shape the decode_32k / long_500k
+dry-run cells lower.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving.kvcache import pad_cache_to
+from repro.train.trainstep import make_serve_step
+
+
+class BatchServer:
+    def __init__(self, cfg: ModelConfig, params, horizon: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.horizon = horizon
+        self._step = jax.jit(make_serve_step(cfg), donate_argnums=1)
+        self.stats = {"prefill_s": 0.0, "decode_s": 0.0, "tokens": 0}
+
+    def generate(self, batch: dict, max_new: int = 32,
+                 stop_token: Optional[int] = None) -> np.ndarray:
+        """Prefill the prompt batch, then decode `max_new` tokens."""
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        logits, cache = M.prefill(self.params, cfg, batch)
+        prompt_len = batch["tokens"].shape[1] + (cfg.num_patches or 0)
+        total = prompt_len + max_new
+        cache = pad_cache_to(cache, total)
+        jax.block_until_ready(logits)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [np.asarray(next_tok)]
+        t0 = time.perf_counter()
+        for i in range(max_new - 1):
+            next_tok, cache = self._step(
+                self.params, cache, next_tok, jnp.int32(prompt_len + i)
+            )
+            out.append(np.asarray(next_tok))
+            if stop_token is not None and bool((out[-1] == stop_token).all()):
+                break
+        jax.block_until_ready(next_tok)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        gen = np.stack(out, axis=1)
+        self.stats["tokens"] += int(gen.size)
+        return gen
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.stats["tokens"] / max(self.stats["decode_s"], 1e-9)

@@ -1,0 +1,49 @@
+"""KV-cache utilities for serving.
+
+Cache *specs* (shapes + shardings) live with each model family
+(`repro.models.model.cache_specs`); this module owns the lifecycle
+operations a server performs on them: allocating to a horizon, growing
+a prefill cache into the serving buffer, and the rolling-window
+semantics used by SWA archs (slot = pos % window, matching
+`models.layers.decode_attention` and `transformer._pack_swa_cache`).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import spec_avals
+from repro.models import model as M
+
+
+def alloc_cache(cfg: ModelConfig, batch: int, horizon: int):
+    """Zero-filled decode cache for `horizon` total positions."""
+    from repro.distributed.sharding import init_params
+
+    return init_params(M.cache_specs(cfg, batch, horizon), jax.random.key(0))
+
+
+def pad_cache_to(cache: Any, total_len: int):
+    """Grow prefill caches (length == prompt) to the serving horizon.
+
+    K/V tensors are (L, B, S, m, h); SSM states are length-free and pass
+    through untouched."""
+
+    def f(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        if name in ("k", "v") and x.ndim == 5:
+            pad = total_len - x.shape[2]
+            if pad > 0:
+                return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return x
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, horizon: int) -> int:
+    """Serving-capacity planning: bytes of the decode cache."""
+    avals = spec_avals(M.cache_specs(cfg, batch, horizon))
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(avals))

@@ -1,0 +1,134 @@
+"""Microbatched train step and serving steps.
+
+`make_train_step(cfg, shape, dp)` returns a pure function
+    train_step(state, batch) -> (new_state, metrics)
+where the global batch is reshaped to (accum, micro_global, ...) and a
+`lax.scan` accumulates fp32 gradients — activation memory is bounded by
+one microbatch regardless of global batch size.  Gradient compression
+(int8 / top-k with error feedback) hooks in between accumulation and the
+optimizer; see repro.distributed.grad_compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import shard
+from repro.models import model as M
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def make_state_specs(cfg: ModelConfig):
+    """ParamSpec tree of the full train state (params + adam m/v + step)."""
+    from repro.distributed.sharding import ParamSpec
+
+    ps = M.param_specs(cfg)
+
+    def pdt(p):
+        return ParamSpec(p.shape, p.logical, init=p.init, scale=p.scale, dtype=cfg.param_dtype)
+
+    def sdt(p):
+        if cfg.opt_state_dtype == "int8":  # 8-bit Adam: q + row scales
+            return {
+                "q": ParamSpec(p.shape, p.logical, init="zeros", dtype="int8"),
+                "s": ParamSpec(
+                    (p.shape[:-1] + (1,)) if p.shape else (),
+                    (p.logical[:-1] + (None,)) if p.shape else (),
+                    init="zeros", dtype="float32",
+                ),
+            }
+        return ParamSpec(p.shape, p.logical, init="zeros", dtype=cfg.opt_state_dtype)
+
+    leaf = lambda x: isinstance(x, ParamSpec)
+    return {
+        "params": jax.tree.map(pdt, ps, is_leaf=leaf),
+        "opt": {
+            "m": jax.tree.map(sdt, ps, is_leaf=leaf),
+            "v": jax.tree.map(sdt, ps, is_leaf=leaf),
+            "step": ParamSpec((), (), init="zeros", dtype="int32"),
+        },
+    }
+
+
+def init_state(cfg: ModelConfig, key):
+    from repro.distributed.sharding import init_params
+
+    params = init_params(M.param_specs(cfg), key, dtype_override=cfg.param_dtype)
+    return {"params": params, "opt": init_opt_state(params, cfg.opt_state_dtype)}
+
+
+def _split_microbatches(batch: Dict, accum: int):
+    def rs(x):
+        y = x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+        # keep the microbatch dim data-sharded; the one-time reshard of the
+        # (tiny, int32) token arrays is negligible
+        return shard(y, (None, "batch") + (None,) * (y.ndim - 2))
+
+    return jax.tree.map(rs, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    shape: ShapeSpec,
+    dp: int,
+    oc: Optional[OptConfig] = None,
+    grad_compressor=None,
+):
+    oc = oc or OptConfig()
+    mb = cfg.auto_microbatch(shape, dp)
+    per_dp = max(1, shape.global_batch // dp)
+    accum = max(1, per_dp // mb)
+
+    def train_step(state, batch):
+        params = state["params"]
+        mbs = _split_microbatches(batch, accum)
+
+        def gfn(p, microbatch):
+            (loss, metrics), grads = jax.value_and_grad(M.loss_fn, has_aux=True)(
+                p, cfg, microbatch
+            )
+            return grads, loss, metrics
+
+        gdt = jnp.dtype(cfg.grad_accum_dtype)
+
+        def body(carry, microbatch):
+            acc_g, acc_loss = carry
+            grads, loss, _ = gfn(params, microbatch)
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(gdt), acc_g, grads)
+            return (acc_g, acc_loss + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        loss = loss_sum / accum
+
+        if grad_compressor is not None:
+            grads = grad_compressor(grads)
+
+        new_params, new_opt, om = adamw_update(oc, params, grads, state["opt"])
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step, {"accum": accum, "microbatch": mb}
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: new token for every sequence in the batch."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = M.decode_step(params, cfg, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return serve_step

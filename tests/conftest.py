@@ -1,0 +1,15 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+# NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here —
+# smoke tests and benches must see the real single device; only
+# launch/dryrun.py forces 512 host devices (in its own process).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,108 @@
+"""Buffer controller (Algorithm 2) + predictor (Eq. 2/4-5) behaviour."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_ingest import IngestConfig
+from repro.core import predictor as P
+from repro.core.buffer import BufferController, PerfMon
+
+
+def test_rls_recovers_linear_model(rng):
+    """mu = A*mu_prev + B*log(beta) + c recovered from noisy samples."""
+    A, B, c = 0.3, 0.08, 0.05
+    s = P.init_mu_model(0.0, 0.0, 0.0)
+    mu_prev = 0.2
+    for _ in range(400):
+        beta = float(rng.uniform(100, 20000))
+        mu = A * mu_prev + B * np.log(beta) + c + rng.normal(0, 0.005)
+        s = P.rls_update(s, P.mu_features(mu_prev, beta), np.float32(mu), lam=1.0)
+        mu_prev = mu
+    theta = np.asarray(s.theta)
+    assert abs(theta[0] - A) < 0.05
+    assert abs(theta[1] - B) < 0.02
+    assert abs(theta[2] - c) < 0.1
+
+
+def test_beta_model_paper_seed():
+    """Eq. 2 seeded with the paper's fitted K=0.597, R=1.48."""
+    s = P.init_beta_model()
+    v = float(P.predict_beta_e(s, rho=0.5, d=2.0))
+    assert abs(v - (0.597 * 0.5 + 1.48 * 4.0)) < 1e-4
+
+
+def test_controller_beta_stays_in_bounds():
+    cfg = IngestConfig(beta_min=100, beta_max=5000, beta_init=1500)
+    ctl = BufferController(cfg, spill_dir="/tmp/repro_spill_test1")
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        ctl.perfmon.observe_rate(float(i), float(rng.uniform(10, 3000)))
+        ctl.perfmon.observe_mu(float(rng.uniform(0, 1)))
+        dec = ctl.decide(edge_table_size=float(rng.uniform(10, 1e4)), density=rng.uniform(0, 1))
+        assert cfg.beta_min <= dec.beta <= cfg.beta_max
+        assert dec.action in ("push", "hold", "throttle", "drain+push")
+
+
+def test_controller_grows_buffer_under_load():
+    cfg = IngestConfig(beta_init=1000, beta_max=50_000)
+    ctl = BufferController(cfg, spill_dir="/tmp/repro_spill_test2")
+    # saturate observed load -> predictions go high -> buffer grows
+    for i in range(16):
+        ctl.perfmon.observe_mu(0.99)
+        ctl.perfmon.observe_rate(float(i), 5000.0)
+    b0 = ctl.beta
+    dec = ctl.decide(edge_table_size=40_000, density=0.5)
+    assert dec.action in ("hold", "throttle")
+    assert ctl.beta > b0
+
+
+def test_controller_shrinks_buffer_when_calm():
+    cfg = IngestConfig(beta_init=10_000, beta_min=200)
+    ctl = BufferController(cfg, spill_dir="/tmp/repro_spill_test3")
+    for i in range(16):
+        ctl.perfmon.observe_mu(0.05)
+        ctl.perfmon.observe_rate(float(i), 10.0)
+    b0 = ctl.beta
+    dec = ctl.decide(edge_table_size=50, density=0.1)
+    assert dec.action in ("push", "drain+push")
+    assert ctl.beta < b0
+
+
+def test_throttle_requires_rising_slope():
+    """Step 3: spill only when load exceeds the hard limit AND rising."""
+    cfg = IngestConfig(cpu_max=0.5, theta2=0.2)
+    ctl = BufferController(cfg, spill_dir="/tmp/repro_spill_test4")
+    # falling load history -> slope < 0 -> no throttle even if mu high
+    for i, mu in enumerate(np.linspace(0.95, 0.55, 16)):
+        ctl.perfmon.observe_mu(float(mu))
+        ctl.perfmon.observe_rate(float(i), 100.0)
+    dec = ctl.decide(edge_table_size=1e5, density=0.9)
+    assert dec.action != "throttle"
+
+
+def test_spill_roundtrip(tmp_path):
+    from repro.core.buffer import SpillStore
+
+    sp = SpillStore(str(tmp_path / "spill"))
+    sp.flush([{"id": 1}, {"id": 2}])
+    sp.flush([{"id": 3}])
+    assert sp.depth == 2
+    out = sp.drain(2)
+    assert [r["id"] for r in out] == [1, 2, 3]
+    assert sp.depth == 0
+
+
+def test_offline_fit_table1_shapes(rng):
+    """Table I reproduction machinery: every model form fits cleanly."""
+    mu_prev = rng.uniform(0.1, 0.9, size=200)
+    beta = rng.uniform(100, 1e4, size=200)
+    y = 0.2 * mu_prev + 0.05 * np.log(beta) + rng.normal(0, 0.01, 200)
+    for name, feat in P.TABLE1_MODELS.items():
+        X = np.stack(feat(mu_prev, beta), axis=1)
+        coef, mae, mse, rmse = P.fit_offline(X, y)
+        assert np.isfinite([mae, mse, rmse]).all(), name
+    # the log model (paper's best) should fit this synthetic data best
+    Xg = np.stack(P.TABLE1_MODELS["a_mu_log"](mu_prev, beta), axis=1)
+    _, mae_g, _, _ = P.fit_offline(Xg, y)
+    Xb = np.stack(P.TABLE1_MODELS["b_mu_beta2"](mu_prev, beta), axis=1)
+    _, mae_b, _, _ = P.fit_offline(Xb, y)
+    assert mae_g < mae_b

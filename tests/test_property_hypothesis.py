@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_ingest import IngestConfig
+from repro.core import compression as C
+from repro.core.buffer import BufferController
+from repro.distributed.grad_compression import int8_roundtrip
+from repro.kernels import ops, ref
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# compression invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(
+    data=st.lists(st.integers(min_value=1, max_value=40), min_size=1, max_size=120),
+)
+def test_dedup_partition_property(data):
+    """Dedup is a partition: counts sum to n, uniques match set()."""
+    n = len(data)
+    cap = 128
+    keys = jnp.asarray(np.pad(np.asarray(data, np.uint32), (0, cap - n)))
+    valid = jnp.arange(cap) < n
+    comp = C.dedup_with_counts(keys, valid)
+    assert int(comp.counts.sum()) == n
+    assert int(comp.n_unique) == len(set(data))
+    uk = np.asarray(comp.keys[: int(comp.n_unique)])
+    assert set(uk.tolist()) == set(data)
+    assert (np.diff(uk.astype(np.int64)) > 0).all()  # sorted unique
+
+
+@settings(**_settings)
+@given(
+    nsrc=st.integers(min_value=2, max_value=30),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_compression_ratio_bounds(nsrc, seed):
+    """0 < ratio <= 1: compressed load never exceeds raw load."""
+    rng = np.random.default_rng(seed)
+    cap = 64
+    n = 48
+    src = jnp.asarray(rng.integers(1, nsrc, size=cap).astype(np.uint32))
+    dst = jnp.asarray(rng.integers(1, nsrc, size=cap).astype(np.uint32))
+    et = jnp.ones((cap,), jnp.int32)
+    valid = jnp.arange(cap) < n
+    from repro.core.edge_table import build_edge_table
+
+    tbl = build_edge_table(src, dst, et, valid)
+    r = float(tbl.compression_ratio())
+    assert 0.0 < r <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# bloom: no false negatives, ever
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(
+    keys=st.lists(
+        st.integers(min_value=1, max_value=2**31 - 1), min_size=1, max_size=64
+    )
+)
+def test_bloom_never_false_negative(keys):
+    k = jnp.asarray(np.asarray(keys, np.uint32))
+    bm = ops.bloom_build(k, jnp.zeros((4, 1024), jnp.uint32))
+    assert bool((np.asarray(ops.bloom_probe(k, bm)) == 1).all())
+
+
+# ---------------------------------------------------------------------------
+# controller invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(
+    mus=st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=4, max_size=30),
+    sizes=st.lists(st.floats(min_value=1.0, max_value=1e5), min_size=4, max_size=30),
+)
+def test_controller_always_in_bounds_and_total(mus, sizes):
+    cfg = IngestConfig(beta_min=100, beta_max=10_000)
+    ctl = BufferController(cfg, spill_dir="/tmp/repro_spill_hyp")
+    for i, (mu, sz) in enumerate(zip(mus, sizes)):
+        ctl.perfmon.observe_mu(mu)
+        ctl.perfmon.observe_rate(float(i), sz)
+        dec = ctl.decide(sz, density=mu)
+        assert cfg.beta_min <= ctl.beta <= cfg.beta_max
+        assert dec.action in ("push", "hold", "throttle", "drain+push")
+        assert 0.0 <= dec.mu_exp <= 1.0  # predictions clipped to [0,1]
+
+
+# ---------------------------------------------------------------------------
+# quantisation error bound
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(
+    scale=st.floats(min_value=1e-3, max_value=1e3),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_int8_error_bound_property(scale, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((rng.normal(size=512) * scale).astype(np.float32))
+    y = int8_roundtrip(x)
+    blocks = np.abs(np.asarray(x)).reshape(-1, 256).max(axis=1)
+    bound = np.repeat(blocks, 256) / 127.0 * 0.5 + 1e-9
+    assert (np.abs(np.asarray(y - x)) <= bound + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# tokenizer determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(text=st.text(alphabet=st.characters(codec="ascii"), max_size=200))
+def test_tokenizer_deterministic_and_in_range(text):
+    from repro.data.tokenizer import HashTokenizer
+
+    tok = HashTokenizer(1024)
+    a = tok.encode(text)
+    b = tok.encode(text)
+    assert a == b
+    assert all(0 <= t < 1024 for t in a)

@@ -1,0 +1,99 @@
+"""Serving loop (BatchServer), KV-cache utils, and 8-bit Adam."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeSpec, get_config, smoke_config
+from repro.distributed.sharding import init_params
+from repro.models import model as M
+from repro.serving.decode import BatchServer
+from repro.serving.kvcache import alloc_cache, cache_bytes, pad_cache_to
+from repro.train.optimizer import dequant_rowwise, quant_rowwise
+from repro.train.trainstep import init_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-780m", "mixtral-8x7b"])
+def test_batch_server_generates(arch):
+    cfg = smoke_config(get_config(arch))
+    params = init_params(M.param_specs(cfg), jax.random.key(0), dtype_override=cfg.dtype)
+    srv = BatchServer(cfg, params)
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    gen = srv.generate({"tokens": tokens}, max_new=6)
+    assert gen.shape == (2, 6)
+    assert (gen >= 0).all() and (gen < cfg.padded_vocab).all()
+    assert srv.tokens_per_s > 0
+
+
+def test_cache_bytes_scales_with_horizon():
+    cfg = smoke_config(get_config("qwen2.5-3b"))
+    b1 = cache_bytes(cfg, 2, 64)
+    b2 = cache_bytes(cfg, 2, 128)
+    assert b2 == 2 * b1  # KV caches scale linearly in horizon
+
+
+def test_ssm_cache_horizon_free():
+    cfg = smoke_config(get_config("mamba2-780m"))
+    assert cache_bytes(cfg, 2, 64) == cache_bytes(cfg, 2, 4096)  # O(1) state
+
+
+def test_pad_cache_roundtrip():
+    cfg = smoke_config(get_config("qwen2.5-3b"))
+    cache = alloc_cache(cfg, 2, 16)
+    padded = pad_cache_to(cache, 32)
+    assert padded["k"].shape[2] == 32
+    np.testing.assert_array_equal(np.asarray(padded["k"][:, :, :16]), np.asarray(cache["k"]))
+
+
+# ---------------------------------------------------------------------------
+# 8-bit Adam
+# ---------------------------------------------------------------------------
+
+
+def test_quant_rowwise_error_bound(rng):
+    x = jnp.asarray(rng.normal(0, 2.0, size=(16, 64)).astype(np.float32))
+    q, s = quant_rowwise(x)
+    y = dequant_rowwise(q, s)
+    bound = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / 127.0 * 0.5 + 1e-6
+    assert (np.abs(np.asarray(y - x)) <= bound + 1e-6).all()
+
+
+def test_int8_adam_trains():
+    cfg = dataclasses.replace(
+        smoke_config(get_config("qwen2.5-3b")), opt_state_dtype="int8"
+    )
+    shape = ShapeSpec("t", 32, 4, "train")
+    state = init_state(cfg, jax.random.key(0))
+    # state structure: quantised moments + row scales
+    qleaf = lambda x: isinstance(x, dict) and set(x.keys()) == {"q", "s"}
+    assert qleaf(jax.tree.leaves(state["opt"]["m"], is_leaf=qleaf)[0])
+    step, _ = make_train_step(cfg, shape, dp=1)
+    tokens = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    jstep = jax.jit(step, donate_argnums=0)
+    losses = []
+    for _ in range(6):
+        state, m = jstep(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert not any(np.isnan(losses))
+
+
+def test_int8_adam_state_smaller():
+    from repro.distributed.sharding import spec_avals
+    from repro.train.trainstep import make_state_specs
+
+    cfg = smoke_config(get_config("qwen2.5-3b"))
+    cfg8 = dataclasses.replace(cfg, opt_state_dtype="int8")
+    size = lambda c: sum(
+        a.size * a.dtype.itemsize
+        for a in jax.tree.leaves(spec_avals(make_state_specs(c)["opt"]))
+    )
+    assert size(cfg8) < 0.35 * size(cfg)  # ~int8+scales vs fp32
