@@ -15,23 +15,25 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro.api import PipelineBuilder
 from repro.configs.paper_ingest import IngestConfig
 from repro.core import predictor as P
-from repro.core.pipeline import IngestionPipeline
 from repro.ingest.sources import BurstyTweetSource
 
 
 def _run(uncontrolled: bool, compress: bool, cpu_max: float = 0.55,
          ticks: int = 250, seed: int = 3, speed: float = 1.0):
-    cfg = IngestConfig(cpu_max=cpu_max)
-    src = BurstyTweetSource(seed=seed)
-    pipe = IngestionPipeline(
-        cfg, uncontrolled=uncontrolled, compress=compress,
-        spill_dir=f"/tmp/repro_bench_{uncontrolled}_{compress}_{cpu_max}",
-        consumer_speed=speed,
+    pipe = (
+        PipelineBuilder(IngestConfig(cpu_max=cpu_max))
+        .with_source(BurstyTweetSource(seed=seed))
+        .uncontrolled(uncontrolled)
+        .compressed(compress)
+        .simulated_consumer(speed=speed)
+        .spill_dir(f"/tmp/repro_bench_{uncontrolled}_{compress}_{cpu_max}")
+        .build()
     )
     t0 = time.perf_counter()
-    rep = pipe.run(src.ticks(), max_ticks=ticks)
+    rep = pipe.run(max_ticks=ticks)
     dt = time.perf_counter() - t0
     return rep, pipe, dt
 
@@ -157,8 +159,8 @@ def bench_ingestor_node() -> Tuple[List[Dict], Dict]:
         "records_per_s_wall": rep.total_records / max(rep.wall_s, 1e-9),
         "instr_per_s_wall": rep.total_instructions / max(rep.wall_s, 1e-9),
         "maxrss_mb": round(maxrss_mb, 1),
-        "commits": len(pipe.ingestor.commits),
-        "commit_busy_mean_ms": 1e3 * float(np.mean([c.busy_s for c in pipe.ingestor.commits]))
-        if pipe.ingestor.commits else 0.0,
+        "commits": len(pipe.sink.ingestor.commits),
+        "commit_busy_mean_ms": 1e3 * float(np.mean([c.busy_s for c in pipe.sink.ingestor.commits]))
+        if pipe.sink.ingestor.commits else 0.0,
     }]
     return rows, rows[0]

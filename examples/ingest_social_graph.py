@@ -5,7 +5,8 @@
 
 Reproduces the claims: uncontrolled ingestion pins the consumer (Fig 7);
 the adaptive controller bounds it at cpu_max (Fig 12); compression cuts
-the instruction load by the Fig-13 band; throttling is rare.
+the instruction load by the Fig-13 band; throttling is rare.  Runs on
+the composable API (`repro.api`).
 
   PYTHONPATH=src python examples/ingest_social_graph.py
 """
@@ -13,10 +14,8 @@ import json
 import os
 import tempfile
 
-import numpy as np
-
+from repro.api import PipelineBuilder
 from repro.configs.paper_ingest import IngestConfig
-from repro.core.pipeline import IngestionPipeline
 from repro.ingest.sources import BurstyTweetSource, FileReplaySource
 
 
@@ -33,12 +32,16 @@ for unc, comp, tag in [
     (True, False, "(a) uncontrolled, raw"),
     (False, True, "(a) controlled + compress"),
 ]:
-    src = BurstyTweetSource(seed=7, mean_rate=60, burst_multiplier=5.0)
-    pipe = IngestionPipeline(
-        IngestConfig(cpu_max=0.55), uncontrolled=unc, compress=comp,
-        spill_dir=f"/tmp/repro_ex_{unc}_{comp}", consumer_speed=0.5,
+    pipe = (
+        PipelineBuilder(IngestConfig(cpu_max=0.55))
+        .with_source(BurstyTweetSource(seed=7, mean_rate=60, burst_multiplier=5.0))
+        .uncontrolled(unc)
+        .compressed(comp)
+        .simulated_consumer(speed=0.5)
+        .spill_dir(f"/tmp/repro_ex_{unc}_{comp}")
+        .build()
     )
-    report(tag, pipe.run(src.ticks(), max_ticks=200))
+    report(tag, pipe.run(max_ticks=200))
 
 # ---- (b) file replay at 1x / 3x / 5x the natural rate ----
 with tempfile.TemporaryDirectory() as td:
@@ -51,12 +54,15 @@ with tempfile.TemporaryDirectory() as td:
             if tick.t > 60:
                 break
     for mult in (1.0, 3.0, 5.0):
-        rs = FileReplaySource(path, rate_multiplier=mult, natural_rate=60)
-        pipe = IngestionPipeline(
-            IngestConfig(cpu_max=0.55), spill_dir=f"/tmp/repro_ex_replay_{mult}",
-            consumer_speed=0.5,
+        pipe = (
+            PipelineBuilder(IngestConfig(cpu_max=0.55))
+            .with_source(FileReplaySource(path, rate_multiplier=mult,
+                                          natural_rate=60))
+            .simulated_consumer(speed=0.5)
+            .spill_dir(f"/tmp/repro_ex_replay_{mult}")
+            .build()
         )
-        report(f"(b) replay {mult:.0f}x natural", pipe.run(rs.ticks(), max_ticks=300))
+        report(f"(b) replay {mult:.0f}x natural", pipe.run(max_ticks=300))
 
 print("\npaper claims validated: bounded CPU under control, ~25%-band "
       "compression, rare throttling; see EXPERIMENTS.md for the tables.")

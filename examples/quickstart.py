@@ -1,29 +1,28 @@
-"""Quickstart: the paper's pipeline in 30 lines.
+"""Quickstart: the paper's pipeline in 30 lines, on the composable API.
 
 Synthesises a bursty tweet stream, runs it through the adaptive-buffer
 ingestion pipeline (Algorithm 2 controller + Algorithm 1/3 graph
-compression), and prints what the controller did.
+compression), and prints what the controller did.  Then re-runs the
+same scenario hash-sharded across 4 per-shard buffer controllers.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
+from repro.api import PipelineBuilder
 from repro.configs.paper_ingest import IngestConfig
-from repro.core.pipeline import IngestionPipeline
+
+# the adaptive pipeline, bounded at 55% consumer load (paper Fig. 12),
+# over a politically-bursty synthetic stream (§IV: ~60 rec/s, 5x bursts)
 from repro.ingest.sources import BurstyTweetSource
 
-# a politically-bursty synthetic stream (paper §IV: ~60 rec/s, 5x bursts)
-source = BurstyTweetSource(seed=42, mean_rate=60, burst_multiplier=5.0)
-
-# the adaptive pipeline, bounded at 55% consumer load (paper Fig. 12)
-pipe = IngestionPipeline(
-    IngestConfig(cpu_max=0.55),
-    keywords=[],               # stage-1 API filter (keywords)
-    uncontrolled=False,        # set True to reproduce the Fig-7 meltdown
-    compress=True,             # ingestion-time graph compression
+pipe = (
+    PipelineBuilder(IngestConfig(cpu_max=0.55))
+    .with_source(BurstyTweetSource(seed=42, mean_rate=60, burst_multiplier=5.0))
+    .with_keywords([])         # stage-1 API filter (keywords)
+    .uncontrolled(False)       # set True to reproduce the Fig-7 meltdown
+    .compressed(True)          # ingestion-time graph compression
+    .build()
 )
-
-report = pipe.run(source.ticks(), max_ticks=120)
+report = pipe.run(max_ticks=120)
 
 mu = report.samples["mu"]
 print(f"records ingested      : {report.total_records}")
@@ -35,5 +34,18 @@ print(f"consumer load mu      : mean {mu.mean():.2f}, max {mu.max():.2f} "
       f"(bound 0.55)")
 print(f"buffer actions        : "
       f"{ {a: report.actions.count(a) for a in set(report.actions)} }")
-print(f"graph store           : {int(pipe.ingestor.store.n_nodes)} nodes, "
-      f"{int(pipe.ingestor.store.n_edges)} edges")
+print(f"graph store           : {int(pipe.store.n_nodes)} nodes, "
+      f"{int(pipe.store.n_edges)} edges")
+
+# ---- the same scenario, sharded by user across 4 collectors ----
+sharded = (
+    PipelineBuilder(IngestConfig(cpu_max=0.55))
+    .with_source(BurstyTweetSource(seed=42, mean_rate=60, burst_multiplier=5.0))
+    .sharded(4)
+    .spill_dir("/tmp/repro_spill_qs_shards")
+    .build()
+)
+srep = sharded.run(max_ticks=120)
+print(f"\nsharded x4            : records={srep.total_records} "
+      f"cr={srep.mean_compression:.3f} "
+      f"buffer high-water={srep.max_buffered} (beta_max 50000)")

@@ -1,0 +1,42 @@
+"""Composable streaming-ingestion API.
+
+The paper's seven-step pipeline (Filter -> Buffer -> Transform ->
+Batch-Optimize -> Ingest -> Pool -> Store) decomposed into explicit,
+independently swappable protocols:
+
+  * `Source`   — anything with a `ticks()` iterator of `StreamTick`s
+                 (`BurstyTweetSource`, `FileReplaySource`, your own).
+  * `Stage`    — per-tick record processing: `FilterStage`,
+                 `TransformStage` (model transformation + graph
+                 compression), `BufferControlStage` (Algorithm 2).
+  * `Consumer` — the store-engine load model: `SimulatedConsumer`
+                 (queued finite-capacity engine, the closed-loop
+                 simulation) or `MeasuredConsumer` (busy-fraction of
+                 the real compiled ingest step).
+  * `Sink`     — commit target: `GraphStoreSink` (GRAPHPUSH pool +
+                 device graph store), or any object with `commit()`.
+
+`StreamPipeline` wires one of each into the paper's control loop;
+`PipelineBuilder` is the fluent facade; `ShardedPipeline` hash-
+partitions the stream by user across N per-shard buffer controllers
+feeding a shared store — the first scale-out scenario.  `MetricsHub`
+carries the structured per-tick trace and user event hooks.
+"""
+from repro.api.protocols import Consumer, Sink, Source, Stage, TickContext
+from repro.api.consumers import MeasuredConsumer, SimulatedConsumer
+from repro.api.sinks import GraphStoreSink
+from repro.api.stages import BufferControlStage, FilterStage, TransformStage
+from repro.api.metrics import MetricsHub, PipelineEvent, PipelineReport
+from repro.api.pipeline import StreamPipeline
+from repro.api.sharded import ShardedPipeline, ShardedReport
+from repro.api.builder import PipelineBuilder
+
+__all__ = [
+    "Source", "Stage", "Consumer", "Sink", "TickContext",
+    "SimulatedConsumer", "MeasuredConsumer",
+    "GraphStoreSink",
+    "FilterStage", "TransformStage", "BufferControlStage",
+    "MetricsHub", "PipelineEvent", "PipelineReport",
+    "StreamPipeline", "PipelineBuilder",
+    "ShardedPipeline", "ShardedReport",
+]

@@ -1,0 +1,96 @@
+"""Structured metrics + event hooks for the ingestion loop.
+
+Replaces the ad-hoc PerfSample plumbing: the pipeline emits typed
+`PipelineEvent`s into a `MetricsHub`, which keeps the per-tick
+`PerfSample` trace, counts events, fans out to subscriber hooks, and
+assembles the final `PipelineReport`.  Hooks let callers watch the
+loop live (dashboards, early-stop, logging) without touching it.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.buffer import PerfSample
+
+
+@dataclasses.dataclass
+class PipelineEvent:
+    """One loop event.  `kind` is one of: tick, push, hold, throttle,
+    spill, drain, commit, commit-failed, sample, report."""
+
+    kind: str
+    t: float
+    payload: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    samples: dict
+    actions: List[str]
+    total_records: int
+    total_instructions: int
+    raw_instructions: int
+    spill_events: int
+    drain_events: int
+    compression_ratios: np.ndarray
+    wall_s: float
+
+    @property
+    def mean_compression(self) -> float:
+        cr = self.compression_ratios
+        return float(cr.mean()) if cr.size else 1.0
+
+
+class MetricsHub:
+    """Event bus + trace accumulator for one pipeline run."""
+
+    def __init__(self):
+        self.trace: List[PerfSample] = []
+        self.counters: collections.Counter = collections.Counter()
+        self._hooks: List[Callable[[PipelineEvent], None]] = []
+
+    def subscribe(self, hook: Callable[[PipelineEvent], None]) -> "MetricsHub":
+        self._hooks.append(hook)
+        return self
+
+    def emit(self, kind: str, t: float, **payload):
+        self.counters[kind] += 1
+        if self._hooks:
+            ev = PipelineEvent(kind, t, payload)
+            for h in self._hooks:
+                h(ev)
+
+    def record(self, sample: PerfSample):
+        self.trace.append(sample)
+        self.emit("sample", sample.t, action=sample.action, mu=sample.mu,
+                  beta=sample.beta, spill_depth=sample.spill_depth)
+
+    # ---- trace -> arrays (same layout the seed controller produced) ----
+    def trace_arrays(self):
+        keys = [f.name for f in dataclasses.fields(PerfSample) if f.name != "action"]
+        return {k: np.asarray([getattr(s, k) for s in self.trace]) for k in keys}, [
+            s.action for s in self.trace
+        ]
+
+    def build_report(self, total_records: int, total_instructions: int,
+                     raw_instructions: int, compression_ratios: List[float],
+                     wall_s: float) -> PipelineReport:
+        samples, actions = self.trace_arrays()
+        rep = PipelineReport(
+            samples=samples,
+            actions=actions,
+            total_records=total_records,
+            total_instructions=total_instructions,
+            raw_instructions=raw_instructions,
+            spill_events=self.counters["spill"],
+            drain_events=self.counters["drain"],
+            compression_ratios=np.asarray(compression_ratios),
+            wall_s=wall_s,
+        )
+        t_last = self.trace[-1].t if self.trace else 0.0
+        self.emit("report", t_last, report=rep)
+        return rep

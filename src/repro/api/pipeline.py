@@ -1,0 +1,199 @@
+"""`StreamPipeline`: the paper's closed control loop over pluggable parts.
+
+Each tick: Source -> FilterStage -> BufferControlStage; the controller
+(Algorithm 2) decides push/hold/throttle/drain from the predictive
+models; pushed buckets go through TransformStage (Algorithm 1 + graph
+compression) into the Sink (Algorithm 3 GRAPHPUSH), and the Consumer
+absorbs the instruction load and reports occupancy mu back to the
+controller.  `uncontrolled=True` bypasses the controller — the paper's
+meltdown baseline (Figs. 1-3, 7).
+
+The loop itself is the only fixed part; every box is swappable via the
+constructor (or `PipelineBuilder`).
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, Optional
+
+from repro.api.consumers import SimulatedConsumer
+from repro.api.metrics import MetricsHub, PipelineReport
+from repro.api.protocols import Source, TickContext
+from repro.api.sinks import GraphStoreSink
+from repro.api.stages import BufferControlStage, FilterStage, TransformStage
+from repro.configs.paper_ingest import IngestConfig
+from repro.core.buffer import PerfSample
+
+
+def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
+                    hub: MetricsHub, state: dict, now: float, dt: float,
+                    consume_dt: Optional[float] = None):
+    """One controlled tick (Algorithm 2 steps 2-7) on one buffer.
+
+    Shared by `StreamPipeline` (one buffer) and `ShardedPipeline` (one
+    call per shard) so the loop semantics cannot drift between them.
+    `consume_dt` is the slice of the tick this buffer may drain from
+    the consumer — dt/n_shards when N buffers share one consumer.
+    `state` carries the cross-tick scalars: last_beta_e/last_mu for the
+    mu-model updates, and the records/instr/raw/crs totals.
+    """
+    cdt = dt if consume_dt is None else consume_dt
+    pm = buf.perfmon
+    dec = buf.decide(len(buf) * 4.0, 0.0)
+
+    if dec.action in ("push", "drain+push") and len(buf) >= 1:
+        if dec.action == "drain+push" and buf.spill_depth:
+            buf.drain_spill()
+            hub.emit("drain", now, depth=buf.spill_depth)
+        batch = buf.take_batch()
+        if batch:
+            et, n_instr, raw_i = transform.encode(batch)
+            out = sink.commit(et, now=now)
+            mu = consumer.consume(n_instr, cdt, now=now)
+            committed = out.get("committed", False)
+            rho = out.get("rho", 1.0) if committed else 1.0
+            cr = float(et.compression_ratio())
+            hub.emit("commit" if committed else "commit-failed", now,
+                     instructions=n_instr, raw=raw_i, rho=rho, cr=cr)
+            pm.observe_mu(mu)
+            pm.observe_bucket(rho, float(et.density()), float(et.size()))
+            pm.observe_mu_outcome(state["last_mu"], state["last_beta_e"], mu)
+            state["last_beta_e"], state["last_mu"] = float(et.size()), mu
+            state["instr"] += n_instr
+            state["raw"] += raw_i
+            state["crs"].append(cr)
+            hub.emit("push", now, records=len(batch))
+            hub.record(PerfSample(now, mu, rho, float(et.density()),
+                                  len(buf), float(et.size()),
+                                  *pm.velocity(), dec.action,
+                                  buf.spill_depth, cr, consumer.delay_s))
+    elif dec.action == "throttle":
+        # spill the whole buffer to disk (data throttling)
+        if len(buf):
+            buf.spill_all()
+            hub.emit("spill", now, depth=buf.spill_depth)
+        mu = consumer.consume(0, cdt, now=now)
+        pm.observe_mu(mu)
+        hub.emit("throttle", now)
+        hub.record(PerfSample(now, mu, 0.0, 0.0, 0,
+                              dec.beta_e, *pm.velocity(),
+                              "throttle", buf.spill_depth, 1.0,
+                              consumer.delay_s))
+    else:  # hold
+        mu = consumer.consume(0, cdt, now=now)
+        pm.observe_mu(mu)
+        hub.emit("hold", now, buffered=len(buf))
+        hub.record(PerfSample(now, mu, 0.0, 0.0, len(buf),
+                              dec.beta_e, *pm.velocity(),
+                              "hold", buf.spill_depth, 1.0,
+                              consumer.delay_s))
+
+
+class StreamPipeline:
+    def __init__(
+        self,
+        cfg: Optional[IngestConfig] = None,
+        source: Optional[Source] = None,
+        filter_stage: Optional[FilterStage] = None,
+        transform: Optional[TransformStage] = None,
+        buffer_stage: Optional[BufferControlStage] = None,
+        consumer=None,
+        sink=None,
+        uncontrolled: bool = False,
+        metrics: Optional[MetricsHub] = None,
+        spill_dir: str = "/tmp/repro_spill",
+    ):
+        self.cfg = cfg or IngestConfig()
+        self.source = source
+        self.filter_stage = filter_stage or FilterStage()
+        self.transform = transform or TransformStage(
+            max_edges_per_batch=self.cfg.max_edges_per_batch)
+        self.buffer_stage = buffer_stage or BufferControlStage(
+            cfg=self.cfg, spill_dir=spill_dir)
+        self.consumer = consumer or SimulatedConsumer()
+        self.sink = sink or GraphStoreSink(
+            node_cap=self.cfg.store_nodes, edge_cap=self.cfg.store_edges)
+        self.uncontrolled = uncontrolled
+        self.metrics = metrics or MetricsHub()
+
+    # ---- convenience accessors ----
+    @property
+    def controller(self):
+        return self.buffer_stage.controller
+
+    @property
+    def buffer(self):
+        return self.buffer_stage.buffer
+
+    @property
+    def store(self):
+        return self.sink.store
+
+    @property
+    def system_delay_s(self) -> float:
+        """alpha (Eq. 3): seconds of work queued at the consumer."""
+        return self.consumer.delay_s
+
+    # ------------------------------------------------------------------
+    def _transform_and_commit(self, records, now: float, dt: float):
+        et, n_instr, raw_instr = self.transform.encode(records)
+        out = self.sink.commit(et, now=now)
+        mu = self.consumer.consume(n_instr, dt, now=now)
+        committed = out.get("committed", False)
+        rho = out.get("rho", 1.0) if committed else 1.0
+        cr = float(et.compression_ratio())
+        self.metrics.emit("commit" if committed else "commit-failed", now,
+                          instructions=n_instr, raw=raw_instr, rho=rho, cr=cr)
+        return et, mu, rho, cr, n_instr, raw_instr
+
+    # ------------------------------------------------------------------
+    def run(self, source_ticks: Optional[Iterable] = None,
+            max_ticks: int = 300) -> PipelineReport:
+        if source_ticks is None:
+            if self.source is None:
+                raise ValueError("no source: pass source_ticks or set source")
+            source_ticks = self.source.ticks()
+        buf = self.buffer_stage
+        pm = buf.perfmon
+        hub = self.metrics
+        total_records = 0
+        t_start = time.time()
+        state = {"last_beta_e": self.cfg.beta_init, "last_mu": 0.0,
+                 "instr": 0, "raw": 0, "crs": []}
+
+        for i, tick in enumerate(source_ticks):
+            if i >= max_ticks:
+                break
+            now, dt = tick.t, 1.0
+            ctx = TickContext(t=now, dt=dt, index=i)
+            # ---- 1. filter ----
+            recs = self.filter_stage(tick.records, ctx)
+            total_records += len(recs)
+            pm.observe_rate(now, len(recs))
+            hub.emit("tick", now, raw=len(tick.records), kept=len(recs))
+            # ---- 2. buffer ----
+            buf.extend(recs)
+
+            if self.uncontrolled:
+                # paper Figs. 1-3/7: push every tick, no control
+                if len(buf):
+                    batch = buf.take_all()
+                    et, mu, rho, cr, ni, ri = self._transform_and_commit(batch, now, dt)
+                    pm.observe_mu(mu)
+                    state["instr"] += ni
+                    state["raw"] += ri
+                    state["crs"].append(cr)
+                    hub.emit("push", now, records=len(batch))
+                    hub.record(PerfSample(now, mu, rho, float(et.density()),
+                                          len(buf), float(et.size()),
+                                          *pm.velocity(), "push",
+                                          buf.spill_depth, cr,
+                                          self.consumer.delay_s))
+                continue
+
+            # ---- 3-7. controlled path ----
+            controlled_tick(buf, self.transform, self.sink, self.consumer,
+                            hub, state, now, dt)
+
+        return hub.build_report(total_records, state["instr"], state["raw"],
+                                state["crs"], time.time() - t_start)

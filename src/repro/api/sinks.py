@@ -1,0 +1,40 @@
+"""Sink implementations (graph-store commit targets).
+
+`GraphStoreSink` binds the pipeline to the device-resident property
+graph through `GraphIngestor` (Algorithm 3 GRAPHPUSH: bounded pool,
+archive-and-retry on commit failure).  Any object with the same
+`commit()` shape — a Neo4j driver, a file writer, a no-op counter —
+drops in unchanged.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.ingestor import GraphIngestor
+from repro.graphstore.store import GraphStore, init_store
+
+
+class GraphStoreSink:
+    """GRAPHPUSH into the JAX hash-table store via the ingestion pool."""
+
+    def __init__(self, ingestor: Optional[GraphIngestor] = None,
+                 store: Optional[GraphStore] = None,
+                 node_cap: int = 1 << 20, edge_cap: int = 1 << 21,
+                 max_pool_size: int = 4, fail_hook=None,
+                 occupancy_window: float = 8.0):
+        if ingestor is None:
+            store = store if store is not None else init_store(node_cap, edge_cap)
+            ingestor = GraphIngestor(store, max_pool_size=max_pool_size,
+                                     fail_hook=fail_hook,
+                                     occupancy_window=occupancy_window)
+        self.ingestor = ingestor
+
+    def commit(self, et, now: Optional[float] = None) -> Dict:
+        return self.ingestor.push(et, now=now)
+
+    def retry_archive(self, now: Optional[float] = None) -> int:
+        return self.ingestor.retry_archive(now)
+
+    @property
+    def store(self) -> GraphStore:
+        return self.ingestor.store

@@ -110,3 +110,11 @@ class GraphIngestor:
         w0 = now - self.occupancy_window
         busy = sum(b for (t, b) in self._busy if t >= w0)
         return min(busy / self.occupancy_window, 1.0)
+
+    def pending_work_s(self) -> float:
+        """Estimated seconds of work queued in the pool (system-delay
+        alpha for the measured path): pooled batches x mean commit
+        cost over the busy window."""
+        busy = [b for (_, b) in self._busy]
+        mean_busy = sum(busy) / len(busy) if busy else 0.0
+        return len(self.pool) * mean_busy

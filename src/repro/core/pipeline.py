@@ -1,52 +1,31 @@
-"""The seven-step ingestion pipeline (Fig. 4):
+"""Back-compat wrapper over the composable API (`repro.api`).
 
-  Filter -> Buffer -> Model Transformation -> Batch Optimizer ->
-  Graph Ingestor -> DBMS pool -> Store
-
-`IngestionPipeline.run()` is the closed control loop: each tick pulls
-from the stream, filters, buffers; the buffer controller (Algorithm 2)
-decides push/hold/throttle/drain from the predictive models; pushed
-buckets are model-transformed (Algorithm 1, with graph compression) and
-committed (Algorithm 3).  `uncontrolled=True` bypasses the controller
-(and optionally compression) — the paper's meltdown baseline
-(Figs. 1-3, 7).
+The seven-step loop (Fig. 4) used to live here as one fused
+`IngestionPipeline.run()`; it is now `repro.api.StreamPipeline`
+composed from Source/Stage/Consumer/Sink parts.  This module keeps the
+original constructor and `run()` contract (same reports, same mu/delay
+numerics for a fixed seed) for existing callers; new code should use
+`repro.api.PipelineBuilder` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Iterable, List, Optional
+from typing import Iterable, Optional
 
-import numpy as np
-
+from repro.api.consumers import SimulatedConsumer
+from repro.api.metrics import PipelineReport
+from repro.api.pipeline import StreamPipeline
+from repro.api.sinks import GraphStoreSink
+from repro.api.stages import BufferControlStage, FilterStage, TransformStage
 from repro.configs.paper_ingest import IngestConfig
-from repro.core.buffer import BufferController, PerfSample
-from repro.core.edge_table import from_raw_batch
-from repro.core.ingestor import GraphIngestor
-from repro.core.transform import MappingSpec, create_edges, tweet_mapping
-from repro.graphstore.store import init_store
-from repro.ingest.filter import analysis_filter, api_keyword_filter, apply_filters
+from repro.core.buffer import BufferController
+from repro.core.transform import MappingSpec
 
-
-@dataclasses.dataclass
-class PipelineReport:
-    samples: dict
-    actions: List[str]
-    total_records: int
-    total_instructions: int
-    raw_instructions: int
-    spill_events: int
-    drain_events: int
-    compression_ratios: np.ndarray
-    wall_s: float
-
-    @property
-    def mean_compression(self) -> float:
-        cr = self.compression_ratios
-        return float(cr.mean()) if cr.size else 1.0
+__all__ = ["IngestionPipeline", "PipelineReport"]
 
 
 class IngestionPipeline:
+    """The paper pipeline with its original (seed) signature."""
+
     def __init__(
         self,
         cfg: IngestConfig = IngestConfig(),
@@ -58,149 +37,50 @@ class IngestionPipeline:
         consumer_speed: float = 1.0,
     ):
         self.cfg = cfg
-        self.mapping = mapping or tweet_mapping()
-        self.stage1 = api_keyword_filter(list(keywords))
         self.uncontrolled = uncontrolled
         self.compress = compress
-        self.controller = BufferController(cfg, spill_dir=spill_dir)
-        self.store = init_store(cfg.store_nodes, cfg.store_edges)
-        self.ingestor = GraphIngestor(self.store, occupancy_window=8.0)
-        self.buffer: List[dict] = []
-        self.consumer_speed = consumer_speed  # scales simulated mu
-        self._mu_sim = 0.0
+        self.consumer_speed = consumer_speed
+        controller = BufferController(cfg, spill_dir=spill_dir)
+        self._pipe = StreamPipeline(
+            cfg=cfg,
+            filter_stage=FilterStage(keywords),
+            transform=TransformStage(
+                mapping=mapping,
+                max_edges_per_batch=cfg.max_edges_per_batch,
+                compress=compress,
+            ),
+            buffer_stage=BufferControlStage(controller=controller),
+            consumer=SimulatedConsumer(speed=consumer_speed),
+            sink=GraphStoreSink(node_cap=cfg.store_nodes,
+                                edge_cap=cfg.store_edges),
+            uncontrolled=uncontrolled,
+        )
 
-    # ------------------------------------------------------------------
-    def _consume_mu(self, instructions: int, dt: float) -> float:
-        """Queued consumer model of the store engine.
+    # ---- seed-era accessors ----
+    @property
+    def controller(self) -> BufferController:
+        return self._pipe.controller
 
-        On real hardware mu is measured (ingestor.occupancy); the
-        closed-loop simulation models the paper's observed behaviour: a
-        finite-capacity engine with a commit queue.  Sustained
-        over-delivery pins mu at 1.0 (the Fig. 2 meltdown) and builds
-        backlog, which is exactly the system-delay term alpha of Eq. 3."""
-        cap = 3_000.0 * self.consumer_speed  # instructions/s at mu=1
-        self._backlog = getattr(self, "_backlog", 0.0) + instructions
-        can = cap * dt
-        done = min(self._backlog, can)
-        self._backlog -= done
-        inst_mu = done / can
-        # short smoothing window (Zabbix-style sampling)
-        self._mu_sim = 0.5 * self._mu_sim + 0.5 * inst_mu
-        return min(self._mu_sim, 1.0)
+    @property
+    def ingestor(self):
+        return self._pipe.sink.ingestor
+
+    @property
+    def store(self):
+        return self._pipe.store
+
+    @property
+    def buffer(self):
+        return self._pipe.buffer
+
+    @property
+    def mapping(self):
+        return self._pipe.transform.mapping
 
     @property
     def system_delay_s(self) -> float:
         """alpha (Eq. 3): seconds of work queued at the consumer."""
-        cap = 3_000.0 * self.consumer_speed
-        return getattr(self, "_backlog", 0.0) / cap
+        return self._pipe.system_delay_s
 
-    def _transform_and_commit(self, records: List[dict], now: float, dt: float):
-        raw = create_edges(records, self.mapping)
-        cap = max(64, 1 << int(np.ceil(np.log2(max(raw.n_edges, 1)))))
-        cap = min(cap, self.cfg.max_edges_per_batch)
-        et = from_raw_batch(raw, cap)
-        if not self.compress:
-            # uncompressed baseline: ingestion load = raw instructions
-            n_instr = 3 * raw.n_edges
-        else:
-            n_instr = int(et.n_nodes) + int(et.n_edges)
-        out = self.ingestor.push(et, now=now)
-        mu = self._consume_mu(n_instr, dt)
-        rho = out.get("rho", 1.0) if out.get("committed") else 1.0
-        cr = float(et.compression_ratio())
-        return et, mu, rho, cr, n_instr, 3 * raw.n_edges
-
-    # ------------------------------------------------------------------
     def run(self, source_ticks, max_ticks: int = 300) -> PipelineReport:
-        cfg = self.cfg
-        ctl = self.controller
-        total_records = 0
-        total_instr = 0
-        raw_instr = 0
-        spills = drains = 0
-        crs: List[float] = []
-        t_start = time.time()
-        last_beta_e, last_mu = cfg.beta_init, 0.0
-
-        for i, tick in enumerate(source_ticks):
-            if i >= max_ticks:
-                break
-            now, dt = tick.t, 1.0
-            # ---- 1. filter ----
-            recs = apply_filters(tick.records, self.stage1, analysis_filter)
-            total_records += len(recs)
-            ctl.perfmon.observe_rate(now, len(recs))
-            # ---- 2. buffer ----
-            self.buffer.extend(recs)
-
-            if self.uncontrolled:
-                # paper Figs. 1-3/7: push every tick, no control
-                if self.buffer:
-                    batch, self.buffer = self.buffer, []
-                    et, mu, rho, cr, ni, ri = self._transform_and_commit(batch, now, dt)
-                    ctl.perfmon.observe_mu(mu)
-                    total_instr += ni
-                    raw_instr += ri
-                    crs.append(cr)
-                    ctl.record(PerfSample(now, mu, rho, float(et.density()),
-                                          len(self.buffer), float(et.size()),
-                                          *ctl.perfmon.velocity(), "push",
-                                          ctl.spill.depth, cr, self.system_delay_s))
-                continue
-
-            # ---- 3-7. controlled path ----
-            density = 0.0
-            size_est = len(self.buffer) * 4.0  # ~edges per record
-            dec = ctl.decide(size_est, density)
-
-            if dec.action in ("push", "drain+push") and len(self.buffer) >= 1:
-                if dec.action == "drain+push" and ctl.spill.depth:
-                    self.buffer.extend(ctl.spill.drain())
-                    drains += 1
-                batch = self.buffer[: ctl.beta]
-                self.buffer = self.buffer[ctl.beta :]
-                if batch:
-                    et, mu, rho, cr, ni, ri = self._transform_and_commit(batch, now, dt)
-                    ctl.perfmon.observe_mu(mu)
-                    ctl.perfmon.observe_bucket(rho, float(et.density()), float(et.size()))
-                    ctl.perfmon.observe_mu_outcome(last_mu, last_beta_e, mu)
-                    last_beta_e, last_mu = float(et.size()), mu
-                    total_instr += ni
-                    raw_instr += ri
-                    crs.append(cr)
-                    ctl.record(PerfSample(now, mu, rho, float(et.density()),
-                                          len(self.buffer), float(et.size()),
-                                          *ctl.perfmon.velocity(), dec.action,
-                                          ctl.spill.depth, cr, self.system_delay_s))
-            elif dec.action == "throttle":
-                # spill the whole buffer to disk (data throttling)
-                if self.buffer:
-                    ctl.spill.flush(self.buffer)
-                    self.buffer = []
-                    spills += 1
-                mu = self._consume_mu(0, dt)
-                ctl.perfmon.observe_mu(mu)
-                ctl.record(PerfSample(now, mu, 0.0, 0.0, 0,
-                                      dec.beta_e, *ctl.perfmon.velocity(),
-                                      "throttle", ctl.spill.depth, 1.0,
-                                      self.system_delay_s))
-            else:  # hold
-                mu = self._consume_mu(0, dt)
-                ctl.perfmon.observe_mu(mu)
-                ctl.record(PerfSample(now, mu, 0.0, 0.0, len(self.buffer),
-                                      dec.beta_e, *ctl.perfmon.velocity(),
-                                      "hold", ctl.spill.depth, 1.0,
-                                      self.system_delay_s))
-
-        samples, actions = ctl.trace_arrays()
-        return PipelineReport(
-            samples=samples,
-            actions=actions,
-            total_records=total_records,
-            total_instructions=total_instr,
-            raw_instructions=raw_instr,
-            spill_events=spills,
-            drain_events=drains,
-            compression_ratios=np.asarray(crs),
-            wall_s=time.time() - t_start,
-        )
+        return self._pipe.run(source_ticks, max_ticks=max_ticks)

@@ -186,7 +186,12 @@ def shard(x, logical: Sequence[Optional[str]], rules: Optional[ShardingRules] = 
 
 
 def get_abstract_mesh():
-    m = jax.sharding.get_abstract_mesh()
+    # public API only from jax 0.5; older versions fall back to no mesh
+    # (callers degrade to their local/unsharded path)
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    m = fn()
     if m is None or m.empty:
         return None
     return m

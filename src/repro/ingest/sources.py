@@ -130,16 +130,24 @@ class FileReplaySource:
     def ticks(self) -> Iterator[StreamTick]:
         buf: List[dict] = []
         per_tick = self.rate * self.dt
-        acc = 0.0
+        if per_tick <= 0:
+            raise ValueError("replay rate must be positive")
+        acc = 0.0  # fractional-record carry so non-integer rates don't drift
         with open(self.path) as f:
             for line in f:
                 buf.append(json.loads(line))
-                if len(buf) >= per_tick + 1:
-                    acc += per_tick
-                    k = int(per_tick)
+                want = acc + per_tick
+                k = int(want)
+                if len(buf) >= k:
+                    acc = want - k
                     out, buf = buf[:k], buf[k:]
                     self.t += self.dt
                     yield StreamTick(self.t, out)
-        if buf:
+        # drain the tail at the programmed rate (no EOF burst)
+        while buf:
+            want = acc + per_tick
+            k = min(int(want), len(buf))
+            acc = want - k
+            out, buf = buf[:k], buf[k:]
             self.t += self.dt
-            yield StreamTick(self.t, buf)
+            yield StreamTick(self.t, out)

@@ -2,19 +2,20 @@
 
   PYTHONPATH=src python -m repro.launch.ingest --ticks 300 --cpu-max 0.55
   PYTHONPATH=src python -m repro.launch.ingest --uncontrolled   # Fig 7 mode
+  PYTHONPATH=src python -m repro.launch.ingest --shards 4       # scale-out
 
-x64 is enabled for exact 64-bit node identity (DESIGN.md §2)."""
+Built on the composable API (`repro.api.PipelineBuilder`); x64 is
+enabled for exact 64-bit node identity (DESIGN.md §2)."""
 import jax
 
 jax.config.update("jax_enable_x64", True)
 
 import argparse
-import dataclasses
 
 import numpy as np
 
+from repro.api import PipelineBuilder
 from repro.configs.paper_ingest import IngestConfig
-from repro.core.pipeline import IngestionPipeline
 from repro.ingest.sources import BurstyTweetSource
 
 
@@ -27,18 +28,42 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rate", type=float, default=60.0)
     ap.add_argument("--burst", type=float, default=5.0)
+    ap.add_argument("--shards", type=int, default=1)
     args = ap.parse_args(argv)
+    if args.shards < 1:
+        ap.error("--shards must be >= 1")
+    if args.shards > 1 and args.uncontrolled:
+        ap.error("--shards requires the controlled pipeline "
+                 "(drop --uncontrolled)")
 
     cfg = IngestConfig(cpu_max=args.cpu_max, mean_rate=args.rate,
                        burst_multiplier=args.burst)
     src = BurstyTweetSource(seed=args.seed, mean_rate=args.rate,
                             burst_multiplier=args.burst)
-    pipe = IngestionPipeline(
-        cfg,
-        uncontrolled=args.uncontrolled,
-        compress=not args.no_compress,
-    )
-    rep = pipe.run(src.ticks(), max_ticks=args.ticks)
+    b = (PipelineBuilder(cfg)
+         .with_source(src)
+         .uncontrolled(args.uncontrolled)
+         .compressed(not args.no_compress))
+    if args.shards > 1:
+        b = b.sharded(args.shards).spill_dir("/tmp/repro_spill_shards")
+    pipe = b.build()
+    rep = pipe.run(max_ticks=args.ticks)
+
+    if args.shards > 1:
+        print(f"mode=sharded x{args.shards} compress={not args.no_compress}")
+        print(f"records={rep.total_records} instructions={rep.total_instructions} "
+              f"raw={rep.raw_instructions}")
+        for i, (sr, hwm) in enumerate(zip(rep.shards, rep.max_buffered)):
+            mu = sr.samples["mu"]
+            print(f"shard {i}: records={sr.total_records} "
+                  f"mu_mean={mu.mean():.3f} mu_max={mu.max():.3f} "
+                  f"buffer_hwm={hwm}")
+        print(f"compression: mean={rep.mean_compression:.3f} "
+              f"spills={rep.spill_events} drains={rep.drain_events}")
+        print(f"store: {int(pipe.store.n_nodes)} nodes, "
+              f"{int(pipe.store.n_edges)} edges")
+        return rep
+
     mu = rep.samples["mu"]
     print(f"mode={'uncontrolled' if args.uncontrolled else 'controlled'} "
           f"compress={not args.no_compress}")
@@ -50,8 +75,8 @@ def main(argv=None):
           f"max={rep.samples['delay_s'].max():.2f}s")
     print(f"compression: mean={rep.mean_compression:.3f} "
           f"spills={rep.spill_events} drains={rep.drain_events}")
-    print(f"store: {int(pipe.ingestor.store.n_nodes)} nodes, "
-          f"{int(pipe.ingestor.store.n_edges)} edges")
+    print(f"store: {int(pipe.store.n_nodes)} nodes, "
+          f"{int(pipe.store.n_edges)} edges")
     return rep
 
 

@@ -1,0 +1,99 @@
+"""GraphIngestor (Algorithm 3 GRAPHPUSH) pool admission + retry paths."""
+import pytest
+
+from repro.core.edge_table import from_raw_batch
+from repro.core.ingestor import GraphIngestor
+from repro.core.transform import create_edges, tweet_mapping
+from repro.graphstore.store import init_store
+
+
+def _et(tag: str, n: int = 5):
+    recs = [{"id": f"{tag}{i}", "user": f"u{tag}{i}", "hashtags": ["x"],
+             "mentions": []} for i in range(n)]
+    return from_raw_batch(create_edges(recs, tweet_mapping()), 64)
+
+
+def test_pool_full_holds_batch_without_commit():
+    """Pool at capacity: the batch is held in local memory (paper
+    §III-B), nothing is committed, and the caller learns the depth."""
+    ing = GraphIngestor(init_store(512, 1024), max_pool_size=2)
+    ing.pool.append(_et("a"))
+    ing.pool.append(_et("b"))
+    out = ing.push(_et("c"))
+    assert out == {"committed": False, "pooled": 3}
+    assert len(ing.pool) == 3
+    assert int(ing.store.n_nodes) == 0  # nothing reached the store
+    assert ing.commits == []
+
+
+def test_pool_drains_fully_once_below_capacity():
+    """A push with pool headroom drains every pooled batch in order."""
+    ing = GraphIngestor(init_store(512, 1024), max_pool_size=4)
+    ing.pool.append(_et("a"))
+    ing.pool.append(_et("b"))
+    out = ing.push(_et("c"))
+    assert out["committed"]
+    assert len(ing.pool) == 0
+    assert len(ing.commits) == 3
+    # 3 batches x 5 records x 2 unique nodes (user+tweet) + hashtag "x"
+    assert int(ing.store.n_nodes) == 3 * 5 * 2 + 1
+
+
+def test_pool_drain_stops_at_first_failure():
+    """A mid-drain commit failure archives that batch and leaves the
+    rest pooled (bounded retry surface)."""
+    fails = {"n": 0}
+
+    def hook():
+        fails["n"] += 1
+        return fails["n"] == 2  # second commit attempt fails
+
+    ing = GraphIngestor(init_store(512, 1024), max_pool_size=4, fail_hook=hook)
+    ing.pool.append(_et("a"))
+    ing.pool.append(_et("b"))
+    out = ing.push(_et("c"))
+    assert not out["committed"] and out["archived"] == 1
+    assert len(ing.archive) == 1  # batch "b" archived
+    assert len(ing.pool) == 1  # batch "c" still pooled
+    assert [c.ok for c in ing.commits] == [True, False]
+
+
+def test_retry_archive_after_injected_failures():
+    """Algorithm 3 line 18: archived batches replay once the
+    connection recovers; a failure during retry stops the replay."""
+    fail = {"on": True}
+    ing = GraphIngestor(init_store(512, 1024),
+                        fail_hook=lambda: fail["on"])
+    for tag in ("a", "b", "c"):
+        out = ing.push(_et(tag))
+        assert not out["committed"]
+    assert len(ing.archive) == 3
+    assert int(ing.store.n_nodes) == 0
+
+    # connection still down: retry commits nothing, archive intact
+    # (the failed head re-archives, so depth is conserved)
+    assert ing.retry_archive() == 0
+    assert len(ing.archive) == 3
+
+    # connection restored: full replay
+    fail["on"] = False
+    assert ing.retry_archive() == 3
+    assert len(ing.archive) == 0
+    assert int(ing.store.n_nodes) == 3 * 5 * 2 + 1
+    assert [c.ok for c in ing.commits] == [False] * 4 + [True] * 3
+
+
+def test_retry_archive_partial_failure_preserves_order():
+    fails = {"seq": [False, True]}  # first retry ok, second fails
+
+    def hook():
+        return fails["seq"].pop(0) if fails["seq"] else False
+
+    ing = GraphIngestor(init_store(512, 1024), fail_hook=lambda: True)
+    ing.push(_et("a"))
+    ing.push(_et("b"))
+    assert len(ing.archive) == 2
+    ing.fail_hook = hook
+    assert ing.retry_archive() == 1  # "a" lands, "b" fails and re-archives
+    assert len(ing.archive) == 1
+    assert int(ing.store.n_nodes) == 5 * 2 + 1
