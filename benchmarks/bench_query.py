@@ -1,0 +1,116 @@
+"""Query-subsystem benches: sketch update throughput, snapshot build
+time, and query latency vs graph size (refs: Gou et al. 2018 GSS;
+Pacaci et al. 2021 streaming graph queries)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(f, *args, iters=10, warmup=2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _tables(rng, n, n_keys, cap):
+    from repro.core.edge_table import from_raw_batch
+    from repro.core.transform import RawEdgeBatch
+
+    src = rng.integers(1, n_keys, size=n).astype(np.uint64)
+    dst = rng.integers(1, n_keys, size=n).astype(np.uint64)
+    et = rng.integers(0, 3, size=n).astype(np.int32)
+    raw = RawEdgeBatch(src=src, dst=dst, etype=et,
+                       src_type=np.zeros(n, np.int32),
+                       dst_type=np.zeros(n, np.int32), n_records=n)
+    return from_raw_batch(raw, cap)
+
+
+def bench_sketch_update() -> Tuple[List[Dict], Dict]:
+    """Ingestion-time sketch: edge instructions absorbed per second."""
+    from repro.query.sketch import init_sketch, sketch_update
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in (1024, 8192):
+        tbl = _tables(rng, n, n_keys=n // 4, cap=n)
+        sk = init_sketch(depth=4, width=256)
+        # time the full update (blocking on the whole pytree): returning
+        # a single scalar would let XLA dead-code-eliminate the scatter
+        us = _time(sketch_update, sk, tbl)
+        rows.append({"batch_edges": n, "us_per_call": round(us, 1),
+                     "edges_per_s": round(n / us * 1e6)})
+    return rows, {"peak_edges_per_s": max(r["edges_per_s"] for r in rows)}
+
+
+def _filled_store(rng, node_cap, edge_cap, n_edges):
+    from repro.graphstore.store import init_store, ingest_step
+
+    store = init_store(node_cap, edge_cap)
+    per = 4096
+    for _ in range(max(1, n_edges // per)):
+        store, _ = ingest_step(store, _tables(rng, per, n_keys=node_cap // 4,
+                                              cap=per))
+    return store
+
+
+def bench_snapshot_build() -> Tuple[List[Dict], Dict]:
+    """Hash-table -> CSR compaction time vs store size."""
+    from repro.query.snapshot import build_snapshot
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for node_cap, edge_cap, n_edges in ((1 << 12, 1 << 14, 8192),
+                                        (1 << 14, 1 << 16, 32768)):
+        store = _filled_store(rng, node_cap, edge_cap, n_edges)
+        us = _time(build_snapshot, store, iters=5)
+        rows.append({
+            "node_cap": node_cap, "edge_cap": edge_cap,
+            "stored_edges": int(store.n_edges),
+            "us_per_call": round(us, 1),
+            "edges_per_s": round(int(store.n_edges) / us * 1e6),
+        })
+    return rows, {"peak_edges_per_s": max(r["edges_per_s"] for r in rows)}
+
+
+def bench_query_latency() -> Tuple[List[Dict], Dict]:
+    """Engine op latency on a compacted snapshot."""
+    from repro.query.engine import (
+        degree_distribution, edge_lookup, k_hop, top_k_degree, triangle_count,
+    )
+    from repro.query.snapshot import build_snapshot
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for node_cap, edge_cap, n_edges in ((1 << 11, 1 << 13, 4096),
+                                        (1 << 12, 1 << 14, 12288)):
+        store = _filled_store(rng, node_cap, edge_cap, n_edges)
+        snap = build_snapshot(store)
+        seeds = jnp.asarray(np.asarray(snap.node_key)[:4], snap.node_key.dtype)
+        qs = jnp.asarray(rng.integers(1, node_cap // 4, size=256),
+                         snap.node_key.dtype)
+        qd = jnp.asarray(rng.integers(1, node_cap // 4, size=256),
+                         snap.node_key.dtype)
+        row = {
+            "stored_edges": int(store.n_edges),
+            "degree_dist_us": round(_time(
+                lambda s: degree_distribution(s, num_bins=64), snap), 1),
+            "top_k_us": round(_time(lambda s: top_k_degree(s, 10)[0], snap), 1),
+            "k_hop2_us": round(_time(
+                lambda s, x: k_hop(s, x, hops=2), snap, seeds), 1),
+            "edge_lookup256_us": round(_time(
+                lambda s, a, b: edge_lookup(s, a, b), snap, qs, qd), 1),
+            "triangle_us": round(_time(
+                lambda s: triangle_count(s), snap, iters=3), 1),
+        }
+        rows.append(row)
+    return rows, {"ops": ["degree_dist", "top_k", "k_hop2",
+                          "edge_lookup256", "triangle"]}

@@ -24,6 +24,9 @@ BENCHES = [
     ("store_ingest", "benchmarks.bench_kernels", "bench_store_ingest", "Alg 3 hot path"),
     ("attention_paths", "benchmarks.bench_kernels", "bench_attention_paths", "LM substrate"),
     ("ssd_chunked_speedup", "benchmarks.bench_kernels", "bench_ssd_vs_naive", "LM substrate"),
+    ("sketch_update", "benchmarks.bench_query", "bench_sketch_update", "GSS/TCM sketch (Gou 2018)"),
+    ("snapshot_build", "benchmarks.bench_query", "bench_snapshot_build", "store->CSR compaction"),
+    ("query_latency", "benchmarks.bench_query", "bench_query_latency", "streaming graph queries (Pacaci 2021)"),
 ]
 
 
@@ -37,11 +40,18 @@ def main() -> None:
 
     all_results = {}
     print("name,us_per_call,derived")
+    n_failed = 0
     for name, mod, fn, ref in BENCHES:
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
-        rows, derived = getattr(importlib.import_module(mod), fn)()
+        try:
+            rows, derived = getattr(importlib.import_module(mod), fn)()
+        except Exception as e:  # one broken bench must not abort the suite
+            n_failed += 1
+            print(f"{name},,{json.dumps({'error': repr(e)})}")
+            all_results[name] = {"error": repr(e), "paper_ref": ref}
+            continue
         us = (time.perf_counter() - t0) * 1e6
         us_field = ""
         if rows and "us_per_call" in rows[0]:
@@ -66,6 +76,10 @@ def main() -> None:
     if args.json:
         with open(args.json, "w") as f:
             json.dump(all_results, f, indent=2, default=str)
+        print(f"(wrote {len(all_results)} bench results to {args.json})")
+    if n_failed:
+        print(f"({n_failed} bench(es) failed; see error rows above)")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,9 @@ from repro.configs.paper_ingest import IngestConfig
 from repro.core.buffer import BufferController
 from repro.core.transform import MappingSpec
 
+# placeholder in the stage list for a build-time-constructed SketchStage
+_SKETCH_SLOT = object()
+
 
 class PipelineBuilder:
     def __init__(self, cfg: Optional[IngestConfig] = None):
@@ -44,6 +47,10 @@ class PipelineBuilder:
         self._shard_key: Optional[Callable[[dict], str]] = None
         self._metrics: Optional[MetricsHub] = None
         self._hooks = []
+        self._stages = []
+        self._sketch_stage = None
+        self._sketch_kw = {}
+        self._query_sink_opts = None
 
     # ---- parts ----
     def with_source(self, source) -> "PipelineBuilder":
@@ -64,6 +71,37 @@ class PipelineBuilder:
 
     def with_transform(self, transform: TransformStage) -> "PipelineBuilder":
         self._transform = transform
+        return self
+
+    def with_stage(self, stage) -> "PipelineBuilder":
+        """Append an extra Stage-protocol record stage (runs after the
+        filter, before the buffer), e.g. a `repro.query.SketchStage`."""
+        self._stages.append(stage)
+        return self
+
+    def with_sketch(self, sketch_stage=None, **kw) -> "PipelineBuilder":
+        """Maintain an ingestion-time graph sketch (repro.query): adds
+        a `SketchStage` after the filter.  When no stage is passed,
+        one is created at build time inheriting the builder's mapping
+        and the config's max_edges_per_batch (so the sketch observes
+        exactly the edges the transform commits); retrieve it via
+        `.sketch_stage` after build(), or keep the reference you pass."""
+        self._sketch_stage = sketch_stage
+        self._sketch_kw = dict(kw)
+        self._stages.append(_SKETCH_SLOT)
+        return self
+
+    @property
+    def sketch_stage(self):
+        """The `SketchStage` added by `with_sketch` (after build())."""
+        return self._sketch_stage
+
+    def with_query_sink(self, **kw) -> "PipelineBuilder":
+        """Wrap the sink in a `repro.query.QuerySink` at build time:
+        commit-consistent sketch + live "sketch" MetricsHub events.
+        Keyword args are forwarded to `QuerySink` (depth, width,
+        answer_every, top_k, ...)."""
+        self._query_sink_opts = dict(kw)
         return self
 
     def with_consumer(self, consumer) -> "PipelineBuilder":
@@ -118,6 +156,24 @@ class PipelineBuilder:
         return self
 
     # ---- assembly ----
+    def _resolve_stages(self):
+        """Materialise the sketch slot with the builder's mapping/cap."""
+        stages = []
+        for st in self._stages:
+            if st is _SKETCH_SLOT:
+                if self._sketch_stage is None:
+                    from repro.query.stage import SketchStage
+
+                    kw = dict(self._sketch_kw)
+                    kw.setdefault("mapping", self._mapping)
+                    kw.setdefault("max_edges_per_batch",
+                                  self.cfg.max_edges_per_batch)
+                    self._sketch_stage = SketchStage(**kw)
+                stages.append(self._sketch_stage)
+            else:
+                stages.append(st)
+        return stages
+
     def build(self) -> Union[StreamPipeline, ShardedPipeline]:
         filt = self._filter or FilterStage(self._keywords)
         transform = self._transform or TransformStage(
@@ -137,6 +193,10 @@ class PipelineBuilder:
         metrics = self._metrics or MetricsHub()
         for h in self._hooks:
             metrics.subscribe(h)
+        if self._query_sink_opts is not None:
+            from repro.query.stage import QuerySink
+
+            sink = QuerySink(sink, hub=metrics, **self._query_sink_opts)
 
         if self._n_shards > 1:
             if self._uncontrolled:
@@ -155,6 +215,7 @@ class PipelineBuilder:
                 spill_dir=self._spill_dir,
                 shard_key=self._shard_key,
                 metrics=metrics,
+                stages=self._resolve_stages(),
             )
         buffer_stage = BufferControlStage(
             controller=self._controller, cfg=self.cfg, spill_dir=self._spill_dir)
@@ -168,6 +229,7 @@ class PipelineBuilder:
             sink=sink,
             uncontrolled=self._uncontrolled,
             metrics=metrics,
+            stages=self._resolve_stages(),
         )
 
     def run(self, max_ticks: int = 300):

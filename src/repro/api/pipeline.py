@@ -14,7 +14,7 @@ constructor (or `PipelineBuilder`).
 from __future__ import annotations
 
 import time
-from typing import Iterable, Optional
+from typing import Iterable, Optional, Sequence
 
 from repro.api.consumers import SimulatedConsumer
 from repro.api.metrics import MetricsHub, PipelineReport
@@ -102,10 +102,12 @@ class StreamPipeline:
         uncontrolled: bool = False,
         metrics: Optional[MetricsHub] = None,
         spill_dir: str = "/tmp/repro_spill",
+        stages: Sequence = (),
     ):
         self.cfg = cfg or IngestConfig()
         self.source = source
         self.filter_stage = filter_stage or FilterStage()
+        self.stages = list(stages)  # extra Stage-protocol record stages
         self.transform = transform or TransformStage(
             max_edges_per_batch=self.cfg.max_edges_per_batch)
         self.buffer_stage = buffer_stage or BufferControlStage(
@@ -166,8 +168,10 @@ class StreamPipeline:
                 break
             now, dt = tick.t, 1.0
             ctx = TickContext(t=now, dt=dt, index=i)
-            # ---- 1. filter ----
+            # ---- 1. filter (+ any extra record stages) ----
             recs = self.filter_stage(tick.records, ctx)
+            for stage in self.stages:
+                recs = stage(recs, ctx)
             total_records += len(recs)
             pm.observe_rate(now, len(recs))
             hub.emit("tick", now, raw=len(tick.records), kept=len(recs))

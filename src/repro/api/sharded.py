@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import time
 import zlib
-from typing import Callable, Iterable, List, Optional
+from typing import Callable, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -65,6 +65,7 @@ class ShardedPipeline:
         spill_dir: str = "/tmp/repro_spill_shard",
         shard_key: Optional[Callable[[dict], str]] = None,
         metrics: Optional[MetricsHub] = None,
+        stages: Sequence = (),
     ):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
@@ -72,6 +73,7 @@ class ShardedPipeline:
         self.n_shards = n_shards
         self.source = source
         self.filter_stage = filter_stage or FilterStage()
+        self.stages = list(stages)  # extra Stage-protocol record stages
         self.transform = transform or TransformStage(
             max_edges_per_batch=self.cfg.max_edges_per_batch)
         self.consumer = consumer or SimulatedConsumer()
@@ -139,6 +141,8 @@ class ShardedPipeline:
             now, dt = tick.t, 1.0
             ctx = TickContext(t=now, dt=dt, index=i)
             recs = self.filter_stage(tick.records, ctx)
+            for stage in self.stages:
+                recs = stage(recs, ctx)
             total_records += len(recs)
             self.metrics.emit("tick", now, raw=len(tick.records), kept=len(recs))
             for si, part in enumerate(self._partition(recs)):

@@ -39,6 +39,11 @@ class GraphIngestor:
         self.archive: List[EdgeTable] = []  # failed commits (Alg. 3 line 18)
         self.commits: List[CommitRecord] = []
         self.fail_hook = fail_hook  # fault injection for tests
+        # observer of every SUCCESSFUL commit: hook(et, stats).  Push can
+        # drain pooled batches and retry_archive replays old ones, so a
+        # commit-consistent observer (e.g. repro.query.QuerySink) must
+        # hook here rather than watch push() arguments.
+        self.commit_hook = None
         self.occupancy_window = occupancy_window
         self._busy: Deque[Tuple[float, float]] = collections.deque(maxlen=512)
 
@@ -78,6 +83,8 @@ class GraphIngestor:
                 ok=True,
             )
             self.commits.append(rec)
+            if self.commit_hook is not None:
+                self.commit_hook(et, s)
             rho = rec.new_nodes / max(rec.batch_nodes, 1)
             return {
                 "committed": True,

@@ -138,10 +138,14 @@ def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
     new-node count (diversity rho numerator), sizes, and the effective
     instruction count actually applied."""
     # ---- nodes: MERGE ----
+    # NB masked lanes scatter to the out-of-range capacity index, which
+    # mode="drop" discards; -1 would WRAP to the last slot and corrupt it.
+    ncap = store.node_keys.shape[0]
+    ecap = store.edge_keys.shape[0]
     pre_found, _ = _lookup_batch(store.node_keys, et.node_ids, et.node_valid)
     nk, nslot, ok = _insert_batch(store.node_keys, et.node_ids, et.node_valid)
     is_new = et.node_valid & ~pre_found & ok
-    node_count = store.node_count.at[jnp.where(et.node_valid & ok, nslot, -1)].add(
+    node_count = store.node_count.at[jnp.where(et.node_valid & ok, nslot, ncap)].add(
         1, mode="drop"
     )
     n_new_nodes = jnp.sum(is_new.astype(jnp.int32))
@@ -153,18 +157,18 @@ def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
     e_pre, _ = _lookup_batch(store.edge_keys, ekey, et.edge_valid)
     ek, eslot, eok = _insert_batch(store.edge_keys, ekey, et.edge_valid)
     e_new = et.edge_valid & ~e_pre & eok
-    wr = jnp.where(et.edge_valid & eok, eslot, -1)
-    edge_src = store.edge_src.at[jnp.where(e_new, eslot, -1)].set(et.src, mode="drop")
-    edge_dst = store.edge_dst.at[jnp.where(e_new, eslot, -1)].set(et.dst, mode="drop")
-    edge_type = store.edge_type.at[jnp.where(e_new, eslot, -1)].set(et.etype, mode="drop")
+    wr = jnp.where(et.edge_valid & eok, eslot, ecap)
+    edge_src = store.edge_src.at[jnp.where(e_new, eslot, ecap)].set(et.src, mode="drop")
+    edge_dst = store.edge_dst.at[jnp.where(e_new, eslot, ecap)].set(et.dst, mode="drop")
+    edge_type = store.edge_type.at[jnp.where(e_new, eslot, ecap)].set(et.etype, mode="drop")
     edge_count = store.edge_count.at[wr].add(et.count, mode="drop")
     n_new_edges = jnp.sum(e_new.astype(jnp.int32))
 
     # ---- degree update (both endpoints of new edges) ----
     sf, sslot = _lookup_batch(nk, et.src, e_new)
     df, dslot = _lookup_batch(nk, et.dst, e_new)
-    node_degree = store.node_degree.at[jnp.where(sf, sslot, -1)].add(1, mode="drop")
-    node_degree = node_degree.at[jnp.where(df, dslot, -1)].add(1, mode="drop")
+    node_degree = store.node_degree.at[jnp.where(sf, sslot, ncap)].add(1, mode="drop")
+    node_degree = node_degree.at[jnp.where(df, dslot, ncap)].add(1, mode="drop")
 
     new_store = GraphStore(
         node_keys=nk,

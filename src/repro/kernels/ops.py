@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import bloom as _bloom
 from repro.kernels import edge_dedup as _dedup
 from repro.kernels import flash_attention as _flash
+from repro.kernels import sketch as _sketch
 from repro.kernels import ssd_scan as _ssd
 
 ON_TPU = any(d.platform == "tpu" for d in jax.devices())
@@ -50,6 +51,12 @@ def bloom_diversity(keys: jax.Array, bitmap: jax.Array):
     hit = bloom_probe(keys, bitmap)
     rho = 1.0 - hit.mean(dtype=jnp.float32)
     return rho, bloom_build(keys, bitmap)
+
+
+def sketch_scatter(edge_w, out_deg, in_deg, r, c, cnt):
+    """Graph-sketch scatter-add hot path (repro.query.sketch)."""
+    return _sketch.sketch_scatter(edge_w, out_deg, in_deg, r, c, cnt,
+                                  interpret=_INTERP)
 
 
 def flash_attention(

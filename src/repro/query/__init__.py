@@ -1,0 +1,49 @@
+"""Streaming query & analytics engine — the read path over the store.
+
+Two complementary ways to query the ingested graph:
+
+  * **Ingestion-time sketch** (`repro.query.sketch`): a GSS/TCM-style
+    fixed-shape count-min sketch of the edge-weight matrix plus
+    per-node degree counters and a heavy-hitter table, updated
+    incrementally as batches flow through the pipeline
+    (`SketchStage` / `QuerySink`).  Answers edge-weight, degree and
+    top-k queries *live, during ingestion*, without touching the
+    store; answers are upper bounds that closely track exact counts.
+  * **Snapshot engine** (`repro.query.snapshot` + `repro.query.engine`):
+    a compaction pass converts the open-addressing hash tables of
+    `repro.graphstore` into a device-resident CSR snapshot; vectorised
+    ops answer exact queries over it — degree distribution, top-k
+    heavy nodes, k-hop neighborhood expansion, triangle counting,
+    edge lookups.
+
+CLI: ``python -m repro.launch.query`` (ingest-then-query and
+query-while-ingesting modes).
+"""
+from repro.query.sketch import (
+    GraphSketch,
+    init_sketch,
+    sketch_degree,
+    sketch_edge_weight,
+    sketch_error_bound,
+    sketch_heavy_hitters,
+    sketch_update,
+)
+from repro.query.snapshot import GraphSnapshot, build_snapshot, node_index
+from repro.query.engine import (
+    degree_distribution,
+    edge_lookup,
+    k_hop,
+    top_k_degree,
+    triangle_count,
+)
+from repro.query.stage import QuerySink, SketchStage
+
+__all__ = [
+    "GraphSketch", "init_sketch", "sketch_update",
+    "sketch_edge_weight", "sketch_degree", "sketch_heavy_hitters",
+    "sketch_error_bound",
+    "GraphSnapshot", "build_snapshot", "node_index",
+    "degree_distribution", "top_k_degree", "k_hop", "triangle_count",
+    "edge_lookup",
+    "SketchStage", "QuerySink",
+]

@@ -1,0 +1,157 @@
+"""Store -> device-resident CSR snapshot (the compaction pass).
+
+The open-addressing hash tables of `repro.graphstore` are ideal for
+O(1) ingest but hostile to traversal: edges of one node are scattered
+across the table.  `build_snapshot` compacts them — entirely on
+device, one jit — into a CSR form the query engine can traverse with
+gathers and segment ops:
+
+  * nodes sorted by key (invalid slots carry the all-ones sentinel and
+    sort last), so key -> compact index is a binary search;
+  * edges relabelled to compact indices and sorted lexicographically
+    by (src, dst), with `indptr` row offsets (forward CSR) and the
+    reverse orientation (`rindptr`, sorted by (dst, src)) for in-edge
+    traversal;
+  * a prefix sum over sorted edge counts, so any contiguous edge range
+    (e.g. all etypes of one (src, dst) pair) sums in O(1).
+
+Shapes stay static at the store capacities; validity is carried by
+masks, so one compiled snapshot program serves any fill level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as C
+from repro.graphstore.store import GraphStore
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class GraphSnapshot:
+    # nodes, sorted by key; slots >= n_nodes hold the sentinel
+    node_key: jax.Array  # (Ncap,) key dtype
+    node_count: jax.Array  # (Ncap,) int32
+    node_degree: jax.Array  # (Ncap,) int32 (unique-edge endpoints, from store)
+    # forward CSR: edges sorted by (src_idx, dst_idx); invalid rows = Ncap
+    indptr: jax.Array  # (Ncap+1,) int32
+    edge_row: jax.Array  # (Ecap,) int32 compact src index
+    edge_col: jax.Array  # (Ecap,) int32 compact dst index
+    edge_type: jax.Array  # (Ecap,) int32
+    edge_count: jax.Array  # (Ecap,) int32
+    edge_prefix: jax.Array  # (Ecap+1,) int32 cumsum of edge_count
+    # reverse CSR: same edges sorted by (dst_idx, src_idx)
+    rindptr: jax.Array  # (Ncap+1,) int32
+    redge_row: jax.Array  # (Ecap,) int32 compact dst index (the row)
+    redge_col: jax.Array  # (Ecap,) int32 compact src index
+    # sizes
+    n_nodes: jax.Array  # scalar int32
+    n_edges: jax.Array  # scalar int32 (unique (src,dst,etype) triples)
+
+    def tree_flatten(self):
+        return dataclasses.astuple(self), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def node_cap(self) -> int:
+        return self.node_key.shape[0]
+
+    @property
+    def edge_valid(self) -> jax.Array:
+        return self.edge_row < self.node_cap
+
+
+def _lex_sort(primary: jax.Array, secondary: jax.Array) -> jax.Array:
+    """Permutation sorting by (primary, secondary), stable."""
+    o1 = jnp.argsort(secondary, stable=True)
+    o2 = jnp.argsort(primary[o1], stable=True)
+    return o1[o2]
+
+
+@jax.jit
+def build_snapshot(store: GraphStore) -> GraphSnapshot:
+    """Compact the hash-table store into a CSR snapshot (one jit)."""
+    kd = store.node_keys.dtype
+    sent = C.sentinel_for(kd)
+    ncap = store.node_keys.shape[0]
+
+    # ---- nodes: sort by key, invalid last ----
+    nvalid = store.node_keys != 0
+    masked = jnp.where(nvalid, store.node_keys, sent)
+    order = jnp.argsort(masked)
+    node_key = masked[order]
+    svalid = node_key != sent
+    node_count = jnp.where(svalid, store.node_count[order], 0)
+    node_degree = jnp.where(svalid, store.node_degree[order], 0)
+    n_nodes = jnp.sum(svalid.astype(jnp.int32))
+
+    # ---- edges: relabel endpoints to compact indices ----
+    evalid = store.edge_keys != 0
+
+    def to_idx(keys):
+        idx = jnp.searchsorted(node_key, keys).astype(jnp.int32)
+        ci = jnp.clip(idx, 0, ncap - 1)
+        found = node_key[ci] == keys
+        return jnp.where(evalid & found, ci, ncap)
+
+    src_idx = to_idx(store.edge_src)
+    dst_idx = to_idx(store.edge_dst)
+    # an edge is in the snapshot only if BOTH endpoints resolved (a
+    # saturated node table can leave dangling endpoints; see ROADMAP)
+    dangling = (src_idx == ncap) | (dst_idx == ncap)
+    src_idx = jnp.where(dangling, ncap, src_idx)
+    dst_idx = jnp.where(dangling, ncap, dst_idx)
+
+    # forward: lexicographic (src, dst); invalid (row = Ncap) sort last
+    perm = _lex_sort(src_idx, dst_idx)
+    edge_row = src_idx[perm]
+    edge_col = dst_idx[perm]
+    live = edge_row < ncap
+    edge_type = jnp.where(live, store.edge_type[perm], 0)
+    edge_count = jnp.where(live, store.edge_count[perm], 0)
+    rows = jnp.arange(ncap + 1, dtype=jnp.int32)
+    indptr = jnp.searchsorted(edge_row, rows, side="left").astype(jnp.int32)
+    edge_prefix = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(edge_count, dtype=jnp.int32)]
+    )
+
+    # reverse: lexicographic (dst, src)
+    rperm = _lex_sort(dst_idx, src_idx)
+    redge_row = dst_idx[rperm]
+    redge_col = jnp.where(redge_row < ncap, src_idx[rperm], ncap)
+    rindptr = jnp.searchsorted(redge_row, rows, side="left").astype(jnp.int32)
+
+    return GraphSnapshot(
+        node_key=node_key,
+        node_count=node_count,
+        node_degree=node_degree,
+        indptr=indptr,
+        edge_row=edge_row,
+        edge_col=edge_col,
+        edge_type=edge_type,
+        edge_count=edge_count,
+        edge_prefix=edge_prefix,
+        rindptr=rindptr,
+        redge_row=redge_row,
+        redge_col=redge_col,
+        n_nodes=n_nodes,
+        n_edges=indptr[-1],
+    )
+
+
+@jax.jit
+def node_index(snap: GraphSnapshot, keys: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Key -> compact index lookup: (found (bool), idx (int32))."""
+    ncap = snap.node_cap
+    idx = jnp.searchsorted(snap.node_key, keys).astype(jnp.int32)
+    ci = jnp.clip(idx, 0, ncap - 1)
+    found = (snap.node_key[ci] == keys) & (keys != 0)
+    return found, jnp.where(found, ci, -1)
