@@ -149,6 +149,74 @@ def bench_prediction() -> Tuple[List[Dict], Dict]:
     return rows, derived
 
 
+def bench_ingest_trajectory() -> Tuple[List[Dict], Dict]:
+    """Perf trajectory of the GRAPHPUSH hot path (BENCH_ingest.json):
+    per-commit wall time, adaptive probe budget, dropped inserts, and
+    incremental-snapshot maintenance cost (delta applies vs the full
+    rebuilds they replace).  Written to BENCH_ingest.json by
+    `benchmarks.run --json` so later PRs can diff the trajectory."""
+    import jax
+
+    from repro.api import GraphStoreSink, PipelineBuilder
+    from repro.ingest.sources import BurstyTweetSource
+    from repro.configs.paper_ingest import IngestConfig
+    from repro.query.snapshot import build_snapshot
+
+    cfg = IngestConfig(store_nodes=1 << 12, store_edges=1 << 14)
+    pipe = (PipelineBuilder(cfg)
+            .with_source(BurstyTweetSource(seed=7, mean_rate=60.0))
+            .with_sink(GraphStoreSink(node_cap=1 << 12, edge_cap=1 << 14))
+            .with_query_sink(depth=4, width=256, answer_every=10**9)
+            .spill_dir("/tmp/repro_bench_trajectory")
+            .build())
+    snap_ms = []
+    qsink = pipe.sink
+    tick = [0]
+
+    def every_tick(ev):
+        if ev.kind != "commit":
+            return
+        tick[0] += 1
+        if tick[0] % 10 == 0:
+            # query-while-ingesting: time the maintained-snapshot serve
+            t0 = time.perf_counter()
+            jax.block_until_ready(qsink.snapshot().n_edges)
+            delta_ms = (time.perf_counter() - t0) * 1e3
+            t0 = time.perf_counter()
+            jax.block_until_ready(build_snapshot(qsink.store).n_edges)
+            full_ms = (time.perf_counter() - t0) * 1e3
+            snap_ms.append({"commit": tick[0],
+                            "serve_ms": round(delta_ms, 2),
+                            "full_rebuild_ms": round(full_ms, 2)})
+
+    pipe.metrics.subscribe(every_tick)
+    rep = pipe.run(max_ticks=120)
+    commits = qsink.ingestor.commits
+    trajectory = [{
+        "commit": i,
+        "wall_ms": round(c.busy_s * 1e3, 2),
+        "probe_rounds": c.probe_rounds,
+        "dropped_inserts": c.dropped,
+        "instructions": c.instructions,
+    } for i, c in enumerate(commits) if c.ok]
+    m = qsink.maintainer
+    derived = {
+        "commits": len(trajectory),
+        "records": rep.total_records,
+        "commit_ms_mean": round(float(np.mean([t["wall_ms"] for t in trajectory])), 2)
+        if trajectory else 0.0,
+        "dropped_total": sum(t["dropped_inserts"] for t in trajectory),
+        "probe_rounds_max": max((t["probe_rounds"] for t in trajectory), default=0),
+        "snapshot_full_builds": m.full_builds,
+        "snapshot_delta_applies": m.delta_applies,
+        "trajectory": trajectory,
+        "snapshot_trajectory": snap_ms,
+    }
+    row = {k: v for k, v in derived.items()
+           if k not in ("trajectory", "snapshot_trajectory")}
+    return [row], derived
+
+
 def bench_ingestor_node() -> Tuple[List[Dict], Dict]:
     """Fig 14 + throughput: pipeline-side resource use and rates."""
     import resource

@@ -63,8 +63,11 @@ def _filled_store(rng, node_cap, edge_cap, n_edges):
 
 
 def bench_snapshot_build() -> Tuple[List[Dict], Dict]:
-    """Hash-table -> CSR compaction time vs store size."""
-    from repro.query.snapshot import build_snapshot
+    """Hash-table -> CSR compaction time vs store size, and the
+    incremental path: apply_delta (one commit merged into the CSR)
+    vs the full rebuild it replaces."""
+    from repro.graphstore.store import ingest_step
+    from repro.query.snapshot import apply_delta, build_snapshot
 
     rng = np.random.default_rng(0)
     rows = []
@@ -72,13 +75,24 @@ def bench_snapshot_build() -> Tuple[List[Dict], Dict]:
                                         (1 << 14, 1 << 16, 32768)):
         store = _filled_store(rng, node_cap, edge_cap, n_edges)
         us = _time(build_snapshot, store, iters=5)
+        # incremental maintenance: merge one more commit as a delta
+        snap = jax.block_until_ready(build_snapshot(store))
+        tbl = _tables(rng, 2048, n_keys=node_cap // 4, cap=2048)
+        store2, stats = ingest_step(store, tbl)
+        us_delta = _time(lambda s, d: apply_delta(s, d)[0].n_edges,
+                         snap, stats["delta"], iters=5)
+        us_full = _time(lambda s: build_snapshot(s).n_edges, store2, iters=5)
         rows.append({
             "node_cap": node_cap, "edge_cap": edge_cap,
             "stored_edges": int(store.n_edges),
             "us_per_call": round(us, 1),
             "edges_per_s": round(int(store.n_edges) / us * 1e6),
+            "us_delta_apply": round(us_delta, 1),
+            "us_full_rebuild": round(us_full, 1),
+            "delta_speedup": round(us_full / max(us_delta, 1e-9), 2),
         })
-    return rows, {"peak_edges_per_s": max(r["edges_per_s"] for r in rows)}
+    return rows, {"peak_edges_per_s": max(r["edges_per_s"] for r in rows),
+                  "delta_speedup": [r["delta_speedup"] for r in rows]}
 
 
 def bench_query_latency() -> Tuple[List[Dict], Dict]:

@@ -5,11 +5,19 @@ is meaningful; structural benches print the primary metric instead).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only compression
+  PYTHONPATH=src python -m benchmarks.run --only store_ingest,snapshot_build
+
+With ``--json`` the full results go to the given file AND the ingest
+perf trajectory (per-commit wall time, probe rounds, dropped inserts,
+snapshot delta-apply vs full-rebuild timings) is written to
+``BENCH_ingest.json`` next to it, so later PRs can diff hot-path
+regressions.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -20,6 +28,7 @@ BENCHES = [
     ("graph_compression", "benchmarks.bench_ingestion", "bench_compression", "Fig 13"),
     ("prediction_models", "benchmarks.bench_ingestion", "bench_prediction", "Table I, Fig 11"),
     ("ingestor_node_health", "benchmarks.bench_ingestion", "bench_ingestor_node", "Fig 14"),
+    ("ingest_trajectory", "benchmarks.bench_ingestion", "bench_ingest_trajectory", "Alg 3 hot path (BENCH_ingest.json)"),
     ("dedup_throughput", "benchmarks.bench_kernels", "bench_dedup_throughput", "Alg 1 hot path"),
     ("store_ingest", "benchmarks.bench_kernels", "bench_store_ingest", "Alg 3 hot path"),
     ("attention_paths", "benchmarks.bench_kernels", "bench_attention_paths", "LM substrate"),
@@ -32,9 +41,11 @@ BENCHES = [
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of bench names")
     ap.add_argument("--json", default=None, help="also dump results to file")
     args = ap.parse_args()
+    only = [s for s in (args.only or "").split(",") if s]
 
     import importlib
 
@@ -42,7 +53,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     n_failed = 0
     for name, mod, fn, ref in BENCHES:
-        if args.only and args.only not in name:
+        if only and not any(s in name for s in only):
             continue
         t0 = time.perf_counter()
         try:
@@ -58,7 +69,9 @@ def main() -> None:
             us_field = f"{rows[0]['us_per_call']}"
         elif rows and "us_per_commit" in rows[0]:
             us_field = f"{rows[0]['us_per_commit']}"
-        print(f"{name},{us_field},{json.dumps(derived, default=str)}")
+        # long per-commit series stay out of stdout (BENCH_ingest.json)
+        show = {k: v for k, v in derived.items() if not k.endswith("trajectory")}
+        print(f"{name},{us_field},{json.dumps(show, default=str)}")
         for r in rows:
             print(f"  {name}.row,,{json.dumps(r, default=str)}")
         all_results[name] = {"rows": rows, "derived": derived, "paper_ref": ref,
@@ -77,6 +90,18 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(all_results, f, indent=2, default=str)
         print(f"(wrote {len(all_results)} bench results to {args.json})")
+        # ingest perf-trajectory file: the hot-path regression record
+        traj = {
+            name: all_results[name]
+            for name in ("ingest_trajectory", "store_ingest", "snapshot_build")
+            if name in all_results
+        }
+        if traj:
+            path = os.path.join(os.path.dirname(os.path.abspath(args.json)),
+                                "BENCH_ingest.json")
+            with open(path, "w") as f:
+                json.dump(traj, f, indent=2, default=str)
+            print(f"(wrote ingest perf trajectory to {path})")
     if n_failed:
         print(f"({n_failed} bench(es) failed; see error rows above)")
         sys.exit(1)

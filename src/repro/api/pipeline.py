@@ -54,7 +54,14 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
             rho = out.get("rho", 1.0) if committed else 1.0
             cr = float(et.compression_ratio())
             hub.emit("commit" if committed else "commit-failed", now,
-                     instructions=n_instr, raw=raw_i, rho=rho, cr=cr)
+                     instructions=n_instr, raw=raw_i, rho=rho, cr=cr,
+                     dropped=out.get("dropped", 0),
+                     probe_rounds=out.get("probe_rounds", 0),
+                     pressure=out.get("pressure", 0.0))
+            if committed:
+                # table pressure -> Algorithm-2 controller (back-pressure)
+                pm.observe_pressure(out.get("pressure", 0.0),
+                                    out.get("dropped", 0))
             pm.observe_mu(mu)
             pm.observe_bucket(rho, float(et.density()), float(et.size()))
             pm.observe_mu_outcome(state["last_mu"], state["last_beta_e"], mu)
@@ -145,7 +152,10 @@ class StreamPipeline:
         rho = out.get("rho", 1.0) if committed else 1.0
         cr = float(et.compression_ratio())
         self.metrics.emit("commit" if committed else "commit-failed", now,
-                          instructions=n_instr, raw=raw_instr, rho=rho, cr=cr)
+                          instructions=n_instr, raw=raw_instr, rho=rho, cr=cr,
+                          dropped=out.get("dropped", 0),
+                          probe_rounds=out.get("probe_rounds", 0),
+                          pressure=out.get("pressure", 0.0))
         return et, mu, rho, cr, n_instr, raw_instr
 
     # ------------------------------------------------------------------

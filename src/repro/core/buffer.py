@@ -60,6 +60,10 @@ class PerfMon:
         self.mu_hist: Deque[float] = collections.deque([0.0] * 16, maxlen=16)
         self.rate_hist: Deque[Tuple[float, float]] = collections.deque(maxlen=16)
         self.rho_hist: Deque[float] = collections.deque(maxlen=cfg.diversity_window)
+        # store table pressure (fused-upsert commit stats): load factor
+        # of the fuller table, and inserts dropped by the last commit
+        self.table_pressure = 0.0
+        self.dropped_inserts = 0
 
     # ---- signal ingestion ----
     def observe_rate(self, t: float, records: float):
@@ -67,6 +71,12 @@ class PerfMon:
 
     def observe_mu(self, mu: float):
         self.mu_hist.append(float(mu))
+
+    def observe_pressure(self, pressure: float, dropped: int):
+        """Table-pressure signal from commit stats: the store's load
+        factor and the inserts its (already escalated) probing dropped."""
+        self.table_pressure = float(pressure)
+        self.dropped_inserts = int(dropped)
 
     def observe_bucket(self, rho: float, density: float, beta_e: float):
         self.rho_hist.append(float(rho))
@@ -173,6 +183,15 @@ class BufferController:
             action = "push"
             if mu_exp <= cfg.theta2 * cfg.cpu_max and self.spill.depth > 0:
                 action = "drain+push"  # step 6
+
+        # table pressure (fused-upsert commit stats): if the last push
+        # dropped inserts even under escalated probing, the store is
+        # saturating — spill this bucket instead of losing data.  One-
+        # shot: the signal is consumed so the next tick retries a push
+        # (the adaptive probe budget may have grown meanwhile).
+        if self.perfmon.dropped_inserts > 0 and action in ("push", "drain+push"):
+            action = "throttle"
+            self.perfmon.dropped_inserts = 0
 
         self.beta = max(cfg.beta_min, min(beta, cfg.beta_max))
         return ControllerDecision(action, self.beta, beta_e, mu_exp, s)

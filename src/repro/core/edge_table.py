@@ -30,9 +30,16 @@ class EdgeTable:
     etype: jax.Array  # (cap,) int32
     count: jax.Array  # (cap,) int32   duplicate-edge multiplicity
     edge_valid: jax.Array  # (cap,) bool
-    # node index
-    node_ids: jax.Array  # (cap,)
-    node_valid: jax.Array  # (cap,) bool
+    # node index — (2*cap,) so every endpoint of a valid edge is
+    # present (cap edges have up to 2*cap distinct endpoints; the seed
+    # truncated to cap, silently dropping node instructions)
+    node_ids: jax.Array  # (2*cap,) sorted unique keys, sentinel tail
+    node_valid: jax.Array  # (2*cap,) bool
+    # per-edge endpoint positions in `node_ids` (the dedup index): the
+    # store reuses the node-upsert slots through these instead of
+    # re-probing the hash table for degree updates
+    src_node_idx: jax.Array  # (cap,) int32
+    dst_node_idx: jax.Array  # (cap,) int32
     # metadata
     n_edges: jax.Array  # scalar int32 (unique)
     n_nodes: jax.Array  # scalar int32 (unique)
@@ -67,16 +74,25 @@ def build_edge_table(src, dst, etype, valid) -> EdgeTable:
     ncomp = C.unique_nodes(src, dst, valid)
     # gather representative (src,dst,etype) of each unique edge
     idx = ecomp.index
+    esrc = jnp.where(ecomp.valid, src[idx], 0)
+    edst = jnp.where(ecomp.valid, dst[idx], 0)
+    # endpoint -> node-index position: `node_ids` is sorted unique with
+    # a sentinel tail, so the position is one binary search; every
+    # valid endpoint is guaranteed present (index is 2*cap wide)
+    nidx = lambda k: jnp.clip(
+        jnp.searchsorted(ncomp.keys, k).astype(jnp.int32), 0, 2 * cap - 1)
     return EdgeTable(
-        src=jnp.where(ecomp.valid, src[idx], 0),
-        dst=jnp.where(ecomp.valid, dst[idx], 0),
+        src=esrc,
+        dst=edst,
         etype=jnp.where(ecomp.valid, etype[idx], 0),
         count=ecomp.counts,
         edge_valid=ecomp.valid,
-        node_ids=ncomp.keys[:cap],
-        node_valid=ncomp.valid[:cap],
+        node_ids=ncomp.keys,
+        node_valid=ncomp.valid,
+        src_node_idx=nidx(esrc),
+        dst_node_idx=nidx(edst),
         n_edges=ecomp.n_unique,
-        n_nodes=jnp.minimum(ncomp.n_unique, cap),
+        n_nodes=ncomp.n_unique,
         n_raw=ecomp.n_input,
     )
 

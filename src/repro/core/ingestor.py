@@ -28,6 +28,8 @@ class CommitRecord:
     new_nodes: int
     batch_nodes: int
     ok: bool
+    probe_rounds: int = 0  # adaptive probe budget the commit ran with
+    dropped: int = 0  # inserts lost to table pressure (probing exhausted)
 
 
 class GraphIngestor:
@@ -39,11 +41,15 @@ class GraphIngestor:
         self.archive: List[EdgeTable] = []  # failed commits (Alg. 3 line 18)
         self.commits: List[CommitRecord] = []
         self.fail_hook = fail_hook  # fault injection for tests
-        # observer of every SUCCESSFUL commit: hook(et, stats).  Push can
+        # observers of every SUCCESSFUL commit: hook(et, stats).  Push can
         # drain pooled batches and retry_archive replays old ones, so a
         # commit-consistent observer (e.g. repro.query.QuerySink) must
-        # hook here rather than watch push() arguments.
+        # hook here rather than watch push() arguments.  `commit_hook`
+        # is the single assignable slot (sketch maintenance);
+        # `commit_hooks` fan out to any number of extra observers
+        # (e.g. the incremental snapshot maintainer).
         self.commit_hook = None
+        self.commit_hooks: List = []
         self.occupancy_window = occupancy_window
         self._busy: Deque[Tuple[float, float]] = collections.deque(maxlen=512)
 
@@ -81,10 +87,14 @@ class GraphIngestor:
                 new_nodes=int(s["new_nodes"]),
                 batch_nodes=int(s["batch_nodes"]),
                 ok=True,
+                probe_rounds=int(s.get("probe_rounds", 0)),
+                dropped=int(s.get("dropped_inserts", 0)),
             )
             self.commits.append(rec)
             if self.commit_hook is not None:
                 self.commit_hook(et, s)
+            for hook in self.commit_hooks:
+                hook(et, s)
             rho = rec.new_nodes / max(rec.batch_nodes, 1)
             return {
                 "committed": True,
@@ -92,6 +102,11 @@ class GraphIngestor:
                 "busy_s": busy,
                 "rho": rho,
                 "instructions": rec.instructions,
+                # table-pressure signals for the Algorithm-2 controller
+                "dropped": rec.dropped,
+                "probe_rounds": rec.probe_rounds,
+                "pressure": max(float(s.get("node_load", 0.0)),
+                                float(s.get("edge_load", 0.0))),
             }
         except ConnectionError:
             # commit failed (network/DBMS) -> archive for replay

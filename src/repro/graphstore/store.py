@@ -7,9 +7,21 @@ edge-table batches (Algorithm 3 GRAPHPUSH): MERGE semantics for nodes
 CREATE-or-count for edges (duplicate edges accumulate `count`, the
 paper's Alg. 1 line 20 semantics at store level).
 
+The commit hot path is a *fused upsert* (repro.kernels.upsert):
+lookup-or-insert in ONE probe sweep per table, and degree updates
+reuse the node-upsert slots through the edge table's dedup index — the
+whole commit runs exactly TWO probe loops (nodes + edges), down from
+six in the seed (see `count_probe_loops`).  The probe budget is
+adaptive: it doubles past 0.6 load factor and doubles again past 0.8
+(ROADMAP "store probing robustness"); `dropped_inserts` in the commit
+stats is the table-pressure signal the Algorithm-2 controller consumes
+via the MetricsHub.
+
 `ingest_step` also returns the number of *new* nodes — exactly the
 bucket-diversity signal rho the buffer controller needs (§III-A), so
-diversity costs nothing extra to compute.
+diversity costs nothing extra to compute — and a `CommitDelta` the
+incremental snapshot maintainer (repro.query.snapshot.apply_delta)
+merges into the CSR without a full recompaction.
 
 The distributed variant shards both tables over the `data` mesh axis by
 key ownership and exchanges entries with a single all_to_all — the
@@ -18,7 +30,6 @@ paper's "DBMS ingestion pool" mapped onto a TPU pod (DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Tuple
 
 import jax
@@ -40,6 +51,41 @@ class GraphStore:
     edge_count: jax.Array  # (Ecap,) int32
     n_nodes: jax.Array  # scalar int32
     n_edges: jax.Array  # scalar int32
+
+    def tree_flatten(self):
+        # shallow on purpose: astuple() recurses into tuple-subclass
+        # leaves (e.g. the PartitionSpec pytree make_distributed_ingest
+        # builds), silently downgrading them to plain tuples
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self)), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CommitDelta:
+    """What one commit changed — the incremental-snapshot input.
+
+    Node arrays are (2*cap,), edge arrays (cap,) at the edge-table
+    capacity.  `*_placed` marks entries that reached the store (valid
+    and not dropped by probing); `*_new` marks first insertions.
+    `src_deg`/`dst_deg` mark the endpoints that received a +1 degree
+    (endpoint present in the table and the edge newly created)."""
+
+    node_ids: jax.Array
+    node_placed: jax.Array
+    node_new: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    etype: jax.Array
+    count: jax.Array
+    edge_placed: jax.Array
+    edge_new: jax.Array
+    src_deg: jax.Array
+    dst_deg: jax.Array
 
     def tree_flatten(self):
         return dataclasses.astuple(self), None
@@ -69,106 +115,69 @@ def init_store(node_cap: int, edge_cap: int, key_dtype=None) -> GraphStore:
     )
 
 
-def _probe_hash(keys: jax.Array, cap: int, i: jax.Array) -> jax.Array:
-    kd = keys.dtype
-    c = jnp.asarray(0x9E3779B97F4A7C15 if kd == jnp.uint64 else 0x9E3779B9, kd)
-    h = keys * c
-    h = h ^ (h >> 16)
-    return ((h.astype(jnp.uint32) + i.astype(jnp.uint32)) % jnp.uint32(cap)).astype(jnp.int32)
-
-
-def _insert_batch(table_keys: jax.Array, keys: jax.Array, valid: jax.Array):
-    """Vectorised insert-if-absent of UNIQUE keys.
-
-    Returns (new_table_keys, slot (int32), is_new (bool)).  Batch keys
-    must be pre-deduplicated (always true: we ingest compressed batches).
-    Linear probing, MAX_PROBES rounds, scatter-max resolves races.
-    """
-    cap = table_keys.shape[0]
-    n = keys.shape[0]
-
-    def body(i, carry):
-        tk, slot, done = carry
-        cand = _probe_hash(keys, cap, jnp.full((n,), i, jnp.int32))
-        cur = tk[cand]
-        hit = (cur == keys) & valid & ~done
-        empty = (cur == 0) & valid & ~done
-        # race for empty slots: scatter-max, winners check back
-        tk = tk.at[jnp.where(empty, cand, cap)].max(keys, mode="drop")
-        won = empty & (tk[cand] == keys)
-        placed = hit | won
-        slot = jnp.where(placed, cand, slot)
-        done = done | placed
-        return tk, slot, done
-
-    slot0 = jnp.full((n,), -1, jnp.int32)
-    done0 = ~valid
-    tk, slot, done = jax.lax.fori_loop(0, MAX_PROBES, body, (table_keys, slot0, done0))
-    # is_new: slot points at our key and it wasn't a pre-existing hit --
-    # recompute: a key existed before iff some probe found cur==key before
-    # any empty. Track via membership BEFORE insert:
-    return tk, slot, done
-
-
-def _lookup_batch(table_keys: jax.Array, keys: jax.Array, valid: jax.Array):
-    """Returns (found (bool), slot (int32, -1 if absent))."""
-    cap = table_keys.shape[0]
-    n = keys.shape[0]
-
-    def body(i, carry):
-        found, slot, dead = carry
-        cand = _probe_hash(keys, cap, jnp.full((n,), i, jnp.int32))
-        cur = table_keys[cand]
-        hit = (cur == keys) & valid & ~found & ~dead
-        miss = (cur == 0) & ~found & ~dead  # empty slot: key absent
-        slot = jnp.where(hit, cand, slot)
-        return found | hit, slot, dead | miss
-
-    found0 = jnp.zeros((n,), bool)
-    slot0 = jnp.full((n,), -1, jnp.int32)
-    found, slot, _ = jax.lax.fori_loop(0, MAX_PROBES, body, (found0, slot0, jnp.zeros((n,), bool)))
-    return found, slot
+def probe_budget(n_used: jax.Array, cap: int) -> jax.Array:
+    """Adaptive probe rounds from the table load factor: MAX_PROBES
+    below 0.6 load, x2 past 0.6, x4 past 0.8.  Monotone in load, so a
+    key placed under an earlier (smaller) budget is always found again
+    under the current one."""
+    load = n_used.astype(jnp.float32) / jnp.float32(cap)
+    mult = 1 + (load >= 0.6).astype(jnp.int32) + 2 * (load >= 0.8).astype(jnp.int32)
+    return jnp.int32(MAX_PROBES) * mult
 
 
 @jax.jit
 def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
     """GRAPHPUSH (Algorithm 3): commit one compressed edge table.
 
-    Returns (store', stats) where stats carries the controller signals:
-    new-node count (diversity rho numerator), sizes, and the effective
-    instruction count actually applied."""
-    # ---- nodes: MERGE ----
+    Two fused probe sweeps (nodes, edges); degree updates reuse the
+    node slots via the edge table's dedup index.  Returns (store',
+    stats) where stats carries the controller signals: new-node count
+    (diversity rho numerator), sizes, the effective instruction count,
+    the table-pressure signals (dropped_inserts, loads, probe budget),
+    and the `CommitDelta` for incremental snapshot maintenance."""
+    from repro.core.compression import mix_keys
+    from repro.kernels import ops
+
     # NB masked lanes scatter to the out-of-range capacity index, which
     # mode="drop" discards; -1 would WRAP to the last slot and corrupt it.
     ncap = store.node_keys.shape[0]
     ecap = store.edge_keys.shape[0]
-    pre_found, _ = _lookup_batch(store.node_keys, et.node_ids, et.node_valid)
-    nk, nslot, ok = _insert_batch(store.node_keys, et.node_ids, et.node_valid)
-    is_new = et.node_valid & ~pre_found & ok
-    node_count = store.node_count.at[jnp.where(et.node_valid & ok, nslot, ncap)].add(
+    n_probes_n = probe_budget(store.n_nodes, ncap)
+    n_probes_e = probe_budget(store.n_edges, ecap)
+
+    # ---- nodes: MERGE (one fused probe sweep) ----
+    nk, nslot, n_isnew = ops.fused_upsert(
+        store.node_keys, et.node_ids, et.node_valid, n_probes_n)
+    node_placed = et.node_valid & (nslot >= 0)
+    is_new = n_isnew & et.node_valid
+    node_count = store.node_count.at[jnp.where(node_placed, nslot, ncap)].add(
         1, mode="drop"
     )
     n_new_nodes = jnp.sum(is_new.astype(jnp.int32))
+    dropped_nodes = jnp.sum((et.node_valid & ~node_placed).astype(jnp.int32))
 
-    # ---- edges: CREATE-or-count ----
-    from repro.core.compression import mix_keys
-
+    # ---- edges: CREATE-or-count (one fused probe sweep) ----
     ekey = mix_keys(et.src, et.dst, et.etype)
-    e_pre, _ = _lookup_batch(store.edge_keys, ekey, et.edge_valid)
-    ek, eslot, eok = _insert_batch(store.edge_keys, ekey, et.edge_valid)
-    e_new = et.edge_valid & ~e_pre & eok
-    wr = jnp.where(et.edge_valid & eok, eslot, ecap)
+    ek, eslot, e_isnew = ops.fused_upsert(
+        store.edge_keys, ekey, et.edge_valid, n_probes_e)
+    edge_placed = et.edge_valid & (eslot >= 0)
+    e_new = e_isnew & et.edge_valid
     edge_src = store.edge_src.at[jnp.where(e_new, eslot, ecap)].set(et.src, mode="drop")
     edge_dst = store.edge_dst.at[jnp.where(e_new, eslot, ecap)].set(et.dst, mode="drop")
     edge_type = store.edge_type.at[jnp.where(e_new, eslot, ecap)].set(et.etype, mode="drop")
-    edge_count = store.edge_count.at[wr].add(et.count, mode="drop")
+    edge_count = store.edge_count.at[jnp.where(edge_placed, eslot, ecap)].add(
+        et.count, mode="drop")
     n_new_edges = jnp.sum(e_new.astype(jnp.int32))
+    dropped_edges = jnp.sum((et.edge_valid & ~edge_placed).astype(jnp.int32))
 
-    # ---- degree update (both endpoints of new edges) ----
-    sf, sslot = _lookup_batch(nk, et.src, e_new)
-    df, dslot = _lookup_batch(nk, et.dst, e_new)
-    node_degree = store.node_degree.at[jnp.where(sf, sslot, ncap)].add(1, mode="drop")
-    node_degree = node_degree.at[jnp.where(df, dslot, ncap)].add(1, mode="drop")
+    # ---- degree update (both endpoints of new edges) — NO re-probing:
+    # the dedup index maps each endpoint to its already-upserted slot
+    sslot = nslot[et.src_node_idx]
+    dslot = nslot[et.dst_node_idx]
+    src_deg = e_new & (sslot >= 0)
+    dst_deg = e_new & (dslot >= 0)
+    node_degree = store.node_degree.at[jnp.where(src_deg, sslot, ncap)].add(1, mode="drop")
+    node_degree = node_degree.at[jnp.where(dst_deg, dslot, ncap)].add(1, mode="drop")
 
     new_store = GraphStore(
         node_keys=nk,
@@ -190,19 +199,70 @@ def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
         "instructions": n_new_nodes + jnp.sum(et.edge_valid.astype(jnp.int32)),
         "store_nodes": new_store.n_nodes,
         "store_edges": new_store.n_edges,
+        # table-pressure signals (MetricsHub -> Algorithm-2 controller)
+        "dropped_nodes": dropped_nodes,
+        "dropped_edges": dropped_edges,
+        "dropped_inserts": dropped_nodes + dropped_edges,
+        "probe_rounds": jnp.maximum(n_probes_n, n_probes_e),
+        "node_load": new_store.n_nodes.astype(jnp.float32) / jnp.float32(ncap),
+        "edge_load": new_store.n_edges.astype(jnp.float32) / jnp.float32(ecap),
+        # incremental snapshot maintenance input
+        "delta": CommitDelta(
+            node_ids=et.node_ids,
+            node_placed=node_placed,
+            node_new=is_new,
+            src=et.src,
+            dst=et.dst,
+            etype=et.etype,
+            count=et.count,
+            edge_placed=edge_placed,
+            edge_new=e_new,
+            src_deg=src_deg,
+            dst_deg=dst_deg,
+        ),
     }
     return new_store, stats
+
+
+def count_probe_loops(et) -> int:
+    """Structural perf contract: number of sequential probe loops
+    (while/scan eqns) in one compiled commit — 2 since the fused
+    upsert (6 in the seed's lookup-then-insert commit).  Benchmarks
+    and tests report/assert this."""
+    kd = et.node_ids.dtype
+    store = init_store(et.node_ids.shape[0], et.src.shape[0], key_dtype=kd)
+    jaxpr = jax.make_jaxpr(ingest_step)(store, et)
+
+    def count(jp) -> int:
+        total = 0
+        for eqn in jp.eqns:
+            if eqn.primitive.name in ("while", "scan"):
+                total += 1
+            for v in eqn.params.values():
+                for sub in (v if isinstance(v, (list, tuple)) else (v,)):
+                    inner = getattr(sub, "jaxpr", None)
+                    if inner is not None:
+                        total += count(inner)
+        return total
+
+    return count(jaxpr.jaxpr)
 
 
 # ---------------------------------------------------------------------------
 # Distributed ingest: shard by key ownership over the `data` axis
 # ---------------------------------------------------------------------------
 
+# stats keys reduced by max instead of sum across shards (budgets and
+# load factors are per-table properties, not additive counts)
+_STATS_MAX_KEYS = ("probe_rounds", "node_load", "edge_load")
+
 
 def make_distributed_ingest(mesh):
     """shard_map ingest over the `data` axis: each shard owns the keys
     with hash % D == rank; one all_to_all routes every edge to its
-    owner shard, then the local path (dedup + MERGE) runs unchanged.
+    owner shard, then the local path (dedup + fused-upsert commit)
+    runs unchanged — sharded and local commits share the one
+    `ingest_step` implementation.
 
     This is the paper's ingestion-pool architecture mapped onto a pod
     (DESIGN.md §2): the Bolt connector pool becomes the data-axis
@@ -235,8 +295,22 @@ def make_distributed_ingest(mesh):
         from repro.core.edge_table import build_edge_table
 
         et = build_edge_table(ex(srcs), ex(dsts), ex(ets), ex(keep))
-        new_store, stats = ingest_step(store, et)
-        stats = {k: jax.lax.psum(v, "data") for k, v in stats.items()}
+        # n_nodes/n_edges are GLOBAL (replicated) but the tables here
+        # are the per-shard slices: scale the counters down so the
+        # adaptive probe budget and load stats see the local fill
+        local_store = dataclasses.replace(
+            store,
+            n_nodes=store.n_nodes // jnp.int32(D),
+            n_edges=store.n_edges // jnp.int32(D),
+        )
+        new_store, stats = ingest_step(local_store, et)
+        # the CommitDelta stays shard-local (it indexes shard tables)
+        stats.pop("delta", None)
+        stats = {
+            k: (jax.lax.pmax(v, "data") if k in _STATS_MAX_KEYS
+                else jax.lax.psum(v, "data"))
+            for k, v in stats.items()
+        }
         # store-level counters are global (replicated) across shards
         new_store = dataclasses.replace(
             new_store,
@@ -251,10 +325,12 @@ def make_distributed_ingest(mesh):
         edge_type=P("data"), edge_count=P("data"),
         n_nodes=P(), n_edges=P(),
     )
-    return jax.shard_map(
-        local_ingest,
-        mesh=mesh,
-        in_specs=(store_specs, P("data"), P("data"), P("data"), P("data")),
-        out_specs=(store_specs, P()),
-        check_vma=False,
-    )
+    in_specs = (store_specs, P("data"), P("data"), P("data"), P("data"))
+    out_specs = (store_specs, P())
+    if hasattr(jax, "shard_map"):  # jax >= 0.6
+        return jax.shard_map(local_ingest, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(local_ingest, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

@@ -18,6 +18,7 @@ from repro.kernels import edge_dedup as _dedup
 from repro.kernels import flash_attention as _flash
 from repro.kernels import sketch as _sketch
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import upsert as _upsert
 
 ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 _INTERP = not ON_TPU
@@ -51,6 +52,18 @@ def bloom_diversity(keys: jax.Array, bitmap: jax.Array):
     hit = bloom_probe(keys, bitmap)
     rho = 1.0 - hit.mean(dtype=jnp.float32)
     return rho, bloom_build(keys, bitmap)
+
+
+def fused_upsert(table_keys, keys, valid, n_probes, use_kernel=None):
+    """Fused lookup-or-insert (GRAPHPUSH commit hot path): one probe
+    sweep per table instead of lookup-then-insert.  Returns
+    (table_keys', slot (-1 = dropped), is_new).  The jnp oracle is the
+    fast path off-TPU (interpret-mode Pallas is validation-only)."""
+    use_kernel = ON_TPU if use_kernel is None else use_kernel
+    if use_kernel:
+        return _upsert.fused_upsert(table_keys, keys, valid, n_probes,
+                                    interpret=_INTERP)
+    return _upsert.fused_upsert_ref(table_keys, keys, valid, n_probes)
 
 
 def sketch_scatter(edge_w, out_deg, in_deg, r, c, cnt):

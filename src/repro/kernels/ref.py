@@ -1,4 +1,9 @@
-"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+The fused-upsert oracle lives next to its kernel (they share the probe
+sweep body so they cannot drift) and is re-exported here:
+`fused_upsert_ref`.
+"""
 from __future__ import annotations
 
 import math
@@ -7,6 +12,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.upsert import fused_upsert_ref  # noqa: F401 (re-export)
 
 # ---------------------------------------------------------------------------
 # edge_dedup oracle

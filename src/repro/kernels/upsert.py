@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused lookup-or-insert for the open-addressing
+graph-store tables (Algorithm 3 GRAPHPUSH commit hot path).
+
+The seed committed a batch with a *lookup* sweep followed by an
+*insert* sweep per table (plus two more lookups for degree updates) —
+six MAX_PROBES-round gather/scatter loops per commit.  This kernel
+fuses lookup-or-insert into ONE probe sweep per table: at each probe
+round a lane either hits its key (slot found, not new), claims an
+empty slot (scatter-max race, winners check back — slot found, new),
+or keeps probing.  Because slots are never freed, a present key is
+always hit before the first empty slot of its probe sequence, so the
+fused sweep is bit-identical to lookup-then-insert.
+
+The probe budget is *dynamic* (a traced scalar): the caller doubles it
+as the table load factor grows (adaptive probing, ROADMAP "store
+probing robustness"), so the loop is a `while` with a data-dependent
+trip count rather than a statically unrolled scan.
+
+`upsert_sweep` is the pure body shared verbatim by the Pallas kernel
+and the jnp oracle `fused_upsert_ref` (repro.kernels.ref style), so
+the two can never drift; tests assert bit-exactness anyway.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def probe_hash(keys: jax.Array, cap: int, i: jax.Array) -> jax.Array:
+    """Linear-probing slot for `keys` at probe round `i` (splitmix mix)."""
+    kd = keys.dtype
+    c = jnp.asarray(0x9E3779B97F4A7C15 if kd == jnp.uint64 else 0x9E3779B9, kd)
+    h = keys * c
+    h = h ^ (h >> 16)
+    return ((h.astype(jnp.uint32) + i.astype(jnp.uint32)) % jnp.uint32(cap)).astype(jnp.int32)
+
+
+def upsert_sweep(table_keys: jax.Array, keys: jax.Array, valid: jax.Array,
+                 n_probes: jax.Array):
+    """Single-pass fused upsert of UNIQUE keys (pre-deduplicated batch).
+
+    Returns (table_keys', slot (int32, -1 = dropped), is_new (bool)).
+    `n_probes` may be a traced scalar (adaptive probe budget).  Races
+    for empty slots resolve by scatter-max; losers keep probing.
+    """
+    cap = table_keys.shape[0]
+    n = keys.shape[0]
+
+    def body(i, carry):
+        tk, slot, is_new, done = carry
+        cand = probe_hash(keys, cap, jnp.full((n,), i, jnp.int32))
+        cur = tk[cand]
+        hit = (cur == keys) & valid & ~done
+        empty = (cur == 0) & valid & ~done
+        tk = tk.at[jnp.where(empty, cand, cap)].max(keys, mode="drop")
+        won = empty & (tk[cand] == keys)
+        placed = hit | won
+        slot = jnp.where(placed, cand, slot)
+        is_new = is_new | won
+        done = done | placed
+        return tk, slot, is_new, done
+
+    tk, slot, is_new, _ = jax.lax.fori_loop(
+        0, n_probes, body,
+        (table_keys, jnp.full((n,), -1, jnp.int32), jnp.zeros((n,), bool), ~valid))
+    return tk, slot, is_new
+
+
+@jax.jit
+def fused_upsert_ref(table_keys: jax.Array, keys: jax.Array, valid: jax.Array,
+                     n_probes: jax.Array):
+    """jnp oracle (and the CPU hot path — interpret-mode Pallas is the
+    validation path, not the fast path; see repro.kernels.ops)."""
+    return upsert_sweep(table_keys, keys, valid,
+                        jnp.asarray(n_probes, jnp.int32))
+
+
+def _upsert_kernel(probes_ref, table_ref, keys_ref, valid_ref,
+                   table_out, slot_out, new_out):
+    tk, slot, is_new = upsert_sweep(
+        table_ref[...], keys_ref[...], valid_ref[...] != 0, probes_ref[0])
+    table_out[...] = tk
+    slot_out[...] = slot
+    new_out[...] = is_new.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_upsert(table_keys: jax.Array, keys: jax.Array, valid: jax.Array,
+                 n_probes: jax.Array, interpret: bool = True):
+    """Fused upsert through the Pallas kernel.
+
+    table_keys (cap,) key dtype (0 = empty); keys (n,) unique batch;
+    valid (n,) bool; n_probes scalar int32 (dynamic probe budget).
+    Returns (table_keys', slot (int32, -1 = dropped), is_new (bool)).
+    VMEM budget: table + batch keys resident (4 MB at cap = 1M uint32).
+    """
+    cap = table_keys.shape[0]
+    n = keys.shape[0]
+    probes = jnp.asarray(n_probes, jnp.int32).reshape(1)
+    tk, slot, new_i = pl.pallas_call(
+        _upsert_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap,), table_keys.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probes, table_keys, keys, valid.astype(jnp.int32))
+    return tk, slot, new_i != 0

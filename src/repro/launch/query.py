@@ -55,7 +55,7 @@ def main(argv=None):
         args.width = 256
 
     from repro.query import (
-        SketchStage, build_snapshot, degree_distribution, edge_lookup,
+        SketchStage, degree_distribution, edge_lookup,
         k_hop, top_k_degree, triangle_count,
     )
 
@@ -70,14 +70,21 @@ def main(argv=None):
                                    edge_cap=args.edge_cap))
          .with_sketch(sketch_stage)
          .with_query_sink(depth=args.depth, width=args.width,
-                          answer_every=args.query_every, top_k=5))
+                          answer_every=args.query_every, top_k=5,
+                          exact_topk=3 if args.mode == "live" else 0))
     if args.mode == "live":
         def on_sketch(ev):
             if ev.kind == "sketch":
                 pairs = list(zip(ev.payload["hh_keys"], ev.payload["hh_counts"]))
+                exact = ""
+                if "exact_degrees" in ev.payload:
+                    exact = " exact-deg: " + " ".join(
+                        f"{k:#x}:{d}" for k, d in zip(ev.payload["exact_keys"],
+                                                      ev.payload["exact_degrees"])
+                        if k)
                 print(f"[t={ev.t:7.1f}] live sketch: commits={ev.payload['commits']} "
                       f"absorbed={ev.payload['absorbed']} top: "
-                      + " ".join(f"{k:#x}:{c}" for k, c in pairs if k))
+                      + " ".join(f"{k:#x}:{c}" for k, c in pairs if k) + exact)
         b = b.on_event(on_sketch)
     pipe = b.build()
 
@@ -87,12 +94,16 @@ def main(argv=None):
           f"{int(store.n_nodes)} nodes, {int(store.n_edges)} edges "
           f"({rep.total_instructions} instructions)")
 
-    # ---- snapshot + exact queries ----
+    # ---- snapshot + exact queries (incrementally maintained CSR) ----
+    qsink0 = pipe.sink  # QuerySink
     t0 = time.perf_counter()
-    snap = jax.block_until_ready(build_snapshot(store))
+    snap = jax.block_until_ready(qsink0.snapshot())
     build_ms = (time.perf_counter() - t0) * 1e3
+    m = qsink0.maintainer
     print(f"snapshot: {int(snap.n_nodes)} nodes, {int(snap.n_edges)} edges, "
-          f"built in {build_ms:.1f} ms")
+          f"served in {build_ms:.1f} ms "
+          f"(maintenance: {m.full_builds} full builds, "
+          f"{m.delta_applies} delta applies)")
     dangling = int(store.n_edges) - int(snap.n_edges)
     if dangling:
         print(f"  ({dangling} edges dropped: endpoint node inserts failed — "

@@ -28,7 +28,13 @@ from repro.query.sketch import (
     sketch_heavy_hitters,
     sketch_update,
 )
-from repro.query.snapshot import GraphSnapshot, build_snapshot, node_index
+from repro.query.snapshot import (
+    GraphSnapshot,
+    SnapshotMaintainer,
+    apply_delta,
+    build_snapshot,
+    node_index,
+)
 from repro.query.engine import (
     degree_distribution,
     edge_lookup,
@@ -42,7 +48,8 @@ __all__ = [
     "GraphSketch", "init_sketch", "sketch_update",
     "sketch_edge_weight", "sketch_degree", "sketch_heavy_hitters",
     "sketch_error_bound",
-    "GraphSnapshot", "build_snapshot", "node_index",
+    "GraphSnapshot", "build_snapshot", "apply_delta",
+    "SnapshotMaintainer", "node_index",
     "degree_distribution", "top_k_degree", "k_hop", "triangle_count",
     "edge_lookup",
     "SketchStage", "QuerySink",

@@ -109,7 +109,8 @@ class SketchStage(_SketchQueries):
 
 
 class QuerySink(_SketchQueries):
-    """Sink wrapper: commit-consistent sketch + live `"sketch"` events.
+    """Sink wrapper: commit-consistent sketch + live `"sketch"` events
+    + incrementally maintained exact CSR snapshot.
 
     Delegates `commit` to the wrapped sink and absorbs every edge
     table the store *actually* commits: when the wrapped sink exposes
@@ -120,13 +121,22 @@ class QuerySink(_SketchQueries):
     absorbing the pushed table when the commit reports success.
     Every `answer_every` commits, a `"sketch"` event with the current
     top-k heavy hitters is emitted on `hub` (when given).
+
+    With `incremental=True` (default) a `SnapshotMaintainer` also
+    observes every commit's `CommitDelta`, so `snapshot()` serves an
+    exact CSR view by merging pending deltas instead of paying a full
+    `build_snapshot` per query.  `exact_topk > 0` additionally puts
+    the exact top-k degrees (from the maintained snapshot) on each
+    live `"sketch"` event — query-while-ingesting without rebuilds.
     """
 
     def __init__(self, inner, sketch: Optional[GraphSketch] = None,
                  depth: int = 4, width: int = 256, hh_slots: int = 64,
                  hub=None, answer_every: int = 10, top_k: int = 5,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 incremental: bool = True, exact_topk: int = 0):
         from repro.kernels import ops
+        from repro.query.snapshot import SnapshotMaintainer
 
         self.inner = inner
         self.sketch = sketch if sketch is not None else init_sketch(
@@ -135,26 +145,53 @@ class QuerySink(_SketchQueries):
         self.answer_every = max(1, answer_every)
         self.top_k = top_k
         self.use_kernel = ops.ON_TPU if use_kernel is None else use_kernel
+        self.exact_topk = exact_topk
         self.commits = 0
         self._now = None
         self._hooked = False
+        self.maintainer = SnapshotMaintainer() if incremental else None
         ingestor = getattr(inner, "ingestor", None)
         if ingestor is not None and hasattr(ingestor, "commit_hook"):
             ingestor.commit_hook = self._absorb
             self._hooked = True
 
-    def _absorb(self, et, _stats):
+    def snapshot(self):
+        """Exact CSR snapshot of the committed store — incrementally
+        maintained (delta merges; full rebuild only on overflow or
+        dangling edges) when `incremental`, else a fresh build."""
+        from repro.query.snapshot import build_snapshot
+
+        if self.maintainer is None:
+            return build_snapshot(self.store)
+        return self.maintainer.snapshot(self.store)
+
+    def _absorb(self, et, stats):
+        # the maintainer must see the commit's delta BEFORE any
+        # exact_topk emission below serves snapshot(), or the served
+        # view lags the store by one commit (and the lag would be
+        # misread as dangling edges, forcing a rebuild per query)
+        if self.maintainer is not None:
+            self.maintainer.absorb(et, stats)
         self.sketch = sketch_update(self.sketch, et,
                                     use_kernel=self.use_kernel)
         self.commits += 1
         if self.hub is not None and self.commits % self.answer_every == 0:
             hk, hc = self.heavy_hitters(self.top_k)
-            self.hub.emit(
-                "sketch", self._now if self._now is not None else 0.0,
+            payload = dict(
                 commits=self.commits,
                 absorbed=int(self.sketch.n_updates),
                 hh_keys=hk.tolist(), hh_counts=hc.tolist(),
                 error_bound=self.error_bound(),
+            )
+            if self.exact_topk > 0 and self.maintainer is not None:
+                from repro.query.engine import top_k_degree
+
+                keys, degs = top_k_degree(self.snapshot(), self.exact_topk)
+                payload["exact_keys"] = np.asarray(keys).tolist()
+                payload["exact_degrees"] = np.asarray(degs).tolist()
+            self.hub.emit(
+                "sketch", self._now if self._now is not None else 0.0,
+                **payload,
             )
 
     def commit(self, et, now: Optional[float] = None) -> Dict:
