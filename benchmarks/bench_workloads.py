@@ -1,0 +1,54 @@
+"""Scenario-family benchmarks: one row per registered workload.
+
+Runs every registry scenario through the closed-loop harness at CI
+size (short ticks, small store) and reports the numbers the perf
+trajectory tracks per scenario: sustained throughput, spill/drop
+counts, buffer-mode transitions and table-pressure throttles.  The
+rows land in BENCH_ingest.json via `benchmarks.run --json`, so the
+trajectory records how each adversarial stream fares PR over PR.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.workloads import list_scenarios, run_scenario
+
+# CI-sized run: enough ticks for every burst mechanism to engage
+# (flash steps fire by t=45) without dominating the bench suite
+TICKS = 80
+NODE_CAP = 1 << 12
+EDGE_CAP = 1 << 14
+
+
+def bench_scenarios() -> Tuple[List[Dict], Dict]:
+    rows = []
+    for scn in list_scenarios():
+        rep = run_scenario(
+            scn.name, ticks=TICKS, seed=3, speed=0.5,
+            node_cap=NODE_CAP, edge_cap=EDGE_CAP,
+            spill_dir=f"/tmp/repro_bench_workload_{scn.name}")
+        rows.append({
+            "scenario": scn.name,
+            "records": rep.total_records,
+            "records_per_stream_s": round(rep.records_per_stream_s, 1),
+            "records_per_wall_s": round(rep.records_per_wall_s, 1),
+            "mean_compression": round(rep.mean_compression, 3),
+            "mu_mean": round(rep.mu_mean, 3),
+            "mu_p95": round(rep.mu_p95, 3),
+            "spills": rep.spill_events,
+            "drains": rep.drain_events,
+            "dropped_inserts": rep.dropped_inserts,
+            "pressure_throttles": rep.pressure_throttles,
+            "transitions": rep.n_transitions,
+            "actions": dict(sorted(rep.action_counts.items())),
+        })
+    bursty = [r for r in rows if r["scenario"] != "steady_state"]
+    derived = {
+        "scenarios": len(rows),
+        "total_records": sum(r["records"] for r in rows),
+        "bursty_scenarios_transitioned": sum(
+            1 for r in bursty if r["transitions"] > 0),
+        "max_records_per_stream_s": max(
+            (r["records_per_stream_s"] for r in rows), default=0.0),
+    }
+    return rows, derived

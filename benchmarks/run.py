@@ -9,9 +9,10 @@ is meaningful; structural benches print the primary metric instead).
 
 With ``--json`` the full results go to the given file AND the ingest
 perf trajectory (per-commit wall time, probe rounds, dropped inserts,
-snapshot delta-apply vs full-rebuild timings) is written to
-``BENCH_ingest.json`` next to it, so later PRs can diff hot-path
-regressions.
+snapshot delta-apply vs full-rebuild timings, per-scenario workload
+rows) is merge-appended as a new run entry into ``BENCH_ingest.json``
+next to it — earlier runs are preserved, so the file accumulates the
+perf trajectory PR over PR instead of only holding the latest run.
 """
 from __future__ import annotations
 
@@ -20,6 +21,10 @@ import json
 import os
 import sys
 import time
+
+# bench names whose results belong in the BENCH_ingest.json trajectory
+TRAJECTORY_BENCHES = ("ingest_trajectory", "store_ingest", "snapshot_build",
+                      "workload_scenarios")
 
 BENCHES = [
     # (name, module, function, paper ref)
@@ -33,10 +38,37 @@ BENCHES = [
     ("store_ingest", "benchmarks.bench_kernels", "bench_store_ingest", "Alg 3 hot path"),
     ("attention_paths", "benchmarks.bench_kernels", "bench_attention_paths", "LM substrate"),
     ("ssd_chunked_speedup", "benchmarks.bench_kernels", "bench_ssd_vs_naive", "LM substrate"),
+    ("workload_scenarios", "benchmarks.bench_workloads", "bench_scenarios", "scenario family (Alg 2 under adversarial streams)"),
     ("sketch_update", "benchmarks.bench_query", "bench_sketch_update", "GSS/TCM sketch (Gou 2018)"),
     ("snapshot_build", "benchmarks.bench_query", "bench_snapshot_build", "store->CSR compaction"),
     ("query_latency", "benchmarks.bench_query", "bench_query_latency", "streaming graph queries (Pacaci 2021)"),
 ]
+
+
+def merge_bench_ingest(path: str, traj: dict) -> int:
+    """Append `traj` as a new run entry in the BENCH_ingest.json perf
+    trajectory, preserving earlier runs (a legacy single-run file is
+    wrapped as run 0).  Returns the new run count."""
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+            if isinstance(prev, dict) and isinstance(prev.get("runs"), list):
+                runs = prev["runs"]
+            elif isinstance(prev, dict) and prev:
+                runs = [{"run": 0, "note": "legacy single-run format",
+                         "benches": prev}]
+        except (OSError, ValueError):
+            runs = []  # unreadable trajectory: start fresh rather than abort
+    runs.append({
+        "run": len(runs),
+        "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "benches": traj,
+    })
+    with open(path, "w") as f:
+        json.dump({"runs": runs}, f, indent=2, default=str)
+    return len(runs)
 
 
 def main() -> None:
@@ -93,15 +125,15 @@ def main() -> None:
         # ingest perf-trajectory file: the hot-path regression record
         traj = {
             name: all_results[name]
-            for name in ("ingest_trajectory", "store_ingest", "snapshot_build")
+            for name in TRAJECTORY_BENCHES
             if name in all_results
         }
         if traj:
             path = os.path.join(os.path.dirname(os.path.abspath(args.json)),
                                 "BENCH_ingest.json")
-            with open(path, "w") as f:
-                json.dump(traj, f, indent=2, default=str)
-            print(f"(wrote ingest perf trajectory to {path})")
+            n = merge_bench_ingest(path, traj)
+            print(f"(appended ingest perf trajectory to {path}: "
+                  f"run {n - 1}, {n} total)")
     if n_failed:
         print(f"({n_failed} bench(es) failed; see error rows above)")
         sys.exit(1)

@@ -1,12 +1,16 @@
 """The paper's §IV experiment, end to end (the paper-kind e2e driver):
 
-  (a) "direct stream at natural rate"  — controlled vs uncontrolled
+  (a) "direct stream" — controlled vs uncontrolled, now driven by a
+      *registry scenario* (`repro.workloads`): a flash-crowd stream
+      whose rate steps 8x while hashtag diversity collapses, instead
+      of the old flat-rate synthetic.
   (b) "file replay at k x natural rate to test the limits"
 
 Reproduces the claims: uncontrolled ingestion pins the consumer (Fig 7);
 the adaptive controller bounds it at cpu_max (Fig 12); compression cuts
-the instruction load by the Fig-13 band; throttling is rare.  Runs on
-the composable API (`repro.api`).
+the instruction load by the Fig-13 band; throttling engages exactly
+during the burst.  Runs on the composable API (`repro.api`) + the
+workload subsystem (`repro.workloads`).
 
   PYTHONPATH=src python examples/ingest_social_graph.py
 """
@@ -16,7 +20,8 @@ import tempfile
 
 from repro.api import PipelineBuilder
 from repro.configs.paper_ingest import IngestConfig
-from repro.ingest.sources import BurstyTweetSource, FileReplaySource
+from repro.ingest.sources import FileReplaySource
+from repro.workloads import ScenarioSource, get_scenario, run_scenario
 
 
 def report(tag, rep):
@@ -27,14 +32,14 @@ def report(tag, rep):
           f"cr={rep.mean_compression:.2f} spills={rep.spill_events}")
 
 
-# ---- (a) natural-rate stream ----
+# ---- (a) flash-crowd scenario: uncontrolled meltdown vs control ----
 for unc, comp, tag in [
     (True, False, "(a) uncontrolled, raw"),
     (False, True, "(a) controlled + compress"),
 ]:
     pipe = (
         PipelineBuilder(IngestConfig(cpu_max=0.55))
-        .with_source(BurstyTweetSource(seed=7, mean_rate=60, burst_multiplier=5.0))
+        .with_source(ScenarioSource("flash_crowd", seed=7))
         .uncontrolled(unc)
         .compressed(comp)
         .simulated_consumer(speed=0.5)
@@ -43,10 +48,19 @@ for unc, comp, tag in [
     )
     report(tag, pipe.run(max_ticks=200))
 
+# the same run through the closed-loop harness: the structured report
+# with the Algorithm-2 buffer-mode transition timeline
+wrep = run_scenario("flash_crowd", ticks=200, seed=7,
+                    spill_dir="/tmp/repro_ex_harness")
+print(f"(a) harness: {wrep.n_transitions} buffer-mode transitions, "
+      f"{wrep.spill_events} spills, "
+      f"{wrep.records_per_stream_s:.0f} rec/s sustained")
+
 # ---- (b) file replay at 1x / 3x / 5x the natural rate ----
 with tempfile.TemporaryDirectory() as td:
     path = os.path.join(td, "tweets.jsonl")
-    src = BurstyTweetSource(seed=11, mean_rate=200)
+    src = ScenarioSource(get_scenario("celebrity_cascade"), seed=11,
+                         rate_scale=200.0 / 60.0)
     with open(path, "w") as f:
         for tick in src.ticks():
             for r in tick.records:
@@ -65,4 +79,5 @@ with tempfile.TemporaryDirectory() as td:
         report(f"(b) replay {mult:.0f}x natural", pipe.run(max_ticks=300))
 
 print("\npaper claims validated: bounded CPU under control, ~25%-band "
-      "compression, rare throttling; see EXPERIMENTS.md for the tables.")
+      "compression, throttling only under the flash crowd; see "
+      "EXPERIMENTS.md for the tables.")

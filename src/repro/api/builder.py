@@ -51,6 +51,7 @@ class PipelineBuilder:
         self._sketch_stage = None
         self._sketch_kw = {}
         self._query_sink_opts = None
+        self._sketch_guided = False
 
     # ---- parts ----
     def with_source(self, source) -> "PipelineBuilder":
@@ -102,6 +103,14 @@ class PipelineBuilder:
         Keyword args are forwarded to `QuerySink` (depth, width,
         answer_every, top_k, ...)."""
         self._query_sink_opts = dict(kw)
+        return self
+
+    def sketch_guided(self, flag: bool = True) -> "PipelineBuilder":
+        """Sketch-guided control (ROADMAP): feed the QuerySink's live
+        heavy-hitter/diversity signal back into each Algorithm-2
+        controller via the MetricsHub "sketch" events.  Implies
+        `with_query_sink()` when one wasn't configured."""
+        self._sketch_guided = flag
         return self
 
     def with_consumer(self, consumer) -> "PipelineBuilder":
@@ -193,10 +202,14 @@ class PipelineBuilder:
         metrics = self._metrics or MetricsHub()
         for h in self._hooks:
             metrics.subscribe(h)
-        if self._query_sink_opts is not None:
+        qs_opts = self._query_sink_opts
+        if self._sketch_guided and qs_opts is None:
+            qs_opts = {}  # sketch events need a QuerySink (build-local:
+            # turning sketch_guided off again must not leave one behind)
+        if qs_opts is not None:
             from repro.query.stage import QuerySink
 
-            sink = QuerySink(sink, hub=metrics, **self._query_sink_opts)
+            sink = QuerySink(sink, hub=metrics, **qs_opts)
 
         if self._n_shards > 1:
             if self._uncontrolled:
@@ -204,7 +217,7 @@ class PipelineBuilder:
             if self._controller is not None:
                 raise ValueError("with_controller() is single-shard only: "
                                  "each shard builds its own controller")
-            return ShardedPipeline(
+            pipe = ShardedPipeline(
                 cfg=self.cfg,
                 n_shards=self._n_shards,
                 source=self._source,
@@ -217,20 +230,34 @@ class PipelineBuilder:
                 metrics=metrics,
                 stages=self._resolve_stages(),
             )
-        buffer_stage = BufferControlStage(
-            controller=self._controller, cfg=self.cfg, spill_dir=self._spill_dir)
-        return StreamPipeline(
-            cfg=self.cfg,
-            source=self._source,
-            filter_stage=filt,
-            transform=transform,
-            buffer_stage=buffer_stage,
-            consumer=consumer,
-            sink=sink,
-            uncontrolled=self._uncontrolled,
-            metrics=metrics,
-            stages=self._resolve_stages(),
-        )
+            controllers = [s.controller for s in pipe.shards]
+        else:
+            buffer_stage = BufferControlStage(
+                controller=self._controller, cfg=self.cfg,
+                spill_dir=self._spill_dir)
+            pipe = StreamPipeline(
+                cfg=self.cfg,
+                source=self._source,
+                filter_stage=filt,
+                transform=transform,
+                buffer_stage=buffer_stage,
+                consumer=consumer,
+                sink=sink,
+                uncontrolled=self._uncontrolled,
+                metrics=metrics,
+                stages=self._resolve_stages(),
+            )
+            controllers = [buffer_stage.controller]
+        if self._sketch_guided:
+            # policy hook: live sketch events -> every controller's
+            # diversity hint (sketch-guided control, see docs/API.md)
+            def _guide(ev, _ctrls=controllers):
+                if ev.kind == "sketch":
+                    for c in _ctrls:
+                        c.observe_sketch(ev.payload)
+
+            metrics.subscribe(_guide)
+        return pipe
 
     def run(self, max_ticks: int = 300):
         """Build and run in one call (source must be set)."""

@@ -117,8 +117,12 @@ class StreamPipeline:
         self.stages = list(stages)  # extra Stage-protocol record stages
         self.transform = transform or TransformStage(
             max_edges_per_batch=self.cfg.max_edges_per_batch)
-        self.buffer_stage = buffer_stage or BufferControlStage(
-            cfg=self.cfg, spill_dir=spill_dir)
+        # explicit None check: an empty BufferControlStage is falsy
+        # (__len__ == 0), so `or` would silently discard the caller's
+        # stage — and with it the builder's controller and spill_dir
+        self.buffer_stage = BufferControlStage(
+            cfg=self.cfg, spill_dir=spill_dir) if buffer_stage is None \
+            else buffer_stage
         self.consumer = consumer or SimulatedConsumer()
         self.sink = sink or GraphStoreSink(
             node_cap=self.cfg.store_nodes, edge_cap=self.cfg.store_edges)

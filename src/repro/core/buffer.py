@@ -26,7 +26,7 @@ import dataclasses
 import os
 import pickle
 import time
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -53,6 +53,10 @@ class PerfSample:
 class PerfMon:
     """PERFMON (Alg. 2 lines 16-23): content stats + load predictions."""
 
+    # weight of the sketch's diversity hint when blended into rho
+    # (the window-mean stays the anchor; the sketch refines it)
+    SKETCH_RHO_WEIGHT = 0.5
+
     def __init__(self, cfg: IngestConfig):
         self.cfg = cfg
         self.beta_model = P.init_beta_model(cfg.K, cfg.R)
@@ -64,6 +68,9 @@ class PerfMon:
         # of the fuller table, and inserts dropped by the last commit
         self.table_pressure = 0.0
         self.dropped_inserts = 0
+        # sketch-guided diversity hint (None until a "sketch" event is
+        # observed; then blended into predict()'s rho)
+        self.sketch_rho: Optional[float] = None
 
     # ---- signal ingestion ----
     def observe_rate(self, t: float, records: float):
@@ -77,6 +84,15 @@ class PerfMon:
         factor and the inserts its (already escalated) probing dropped."""
         self.table_pressure = float(pressure)
         self.dropped_inserts = int(dropped)
+
+    def observe_sketch(self, concentration: float):
+        """Sketch-guided control (ROADMAP): the ingestion-time sketch's
+        heavy-hitter mass fraction is a content-diversity signal richer
+        than the pre-commit bloom rho — high concentration means the
+        stream is collapsing onto few nodes, so compression will be
+        strong and the effective buffer small.  Stored as a diversity
+        hint rho ~ 1 - concentration and blended in `predict`."""
+        self.sketch_rho = float(np.clip(1.0 - concentration, 0.0, 1.0))
 
     def observe_bucket(self, rho: float, density: float, beta_e: float):
         self.rho_hist.append(float(rho))
@@ -104,6 +120,9 @@ class PerfMon:
     def predict(self, edge_table_size: float, density: float) -> Tuple[float, float, float]:
         """Returns (beta_e, mu_exp, slope) — Alg. 2 line 2."""
         rho = float(np.mean(self.rho_hist)) if self.rho_hist else 1.0
+        if self.sketch_rho is not None:
+            w = self.SKETCH_RHO_WEIGHT
+            rho = (1.0 - w) * rho + w * self.sketch_rho
         beta_e = float(P.predict_beta_e(self.beta_model, rho, density))
         beta_e = max(beta_e, float(edge_table_size))
         mu_prev = self.mu_hist[-1]
@@ -149,6 +168,7 @@ class ControllerDecision:
     beta_e: float
     mu_exp: float
     slope: float
+    reason: str = ""  # throttle cause: "load" (step 3) | "pressure" (table)
 
 
 class BufferController:
@@ -160,12 +180,18 @@ class BufferController:
         self.perfmon = PerfMon(cfg)
         self.spill = SpillStore(spill_dir)
         self.trace: List[PerfSample] = []
+        # observability (workload harness): per-action decision counts,
+        # table-pressure throttle count, and an optional decision hook
+        self.decision_counts: collections.Counter = collections.Counter()
+        self.pressure_throttles = 0
+        self.on_decision: Optional[Callable[["ControllerDecision"], None]] = None
 
     def decide(self, edge_table_size: float, density: float) -> ControllerDecision:
         cfg = self.cfg
         beta_e, mu_exp, s = self.perfmon.predict(edge_table_size, density)
         beta = self.beta
         action = "push"
+        reason = ""
 
         if mu_exp >= cfg.cpu_max:
             # step 2: high alert -- absorb by growing the buffer
@@ -176,6 +202,7 @@ class BufferController:
             if mu_exp >= (1.0 + cfg.theta2) * cfg.cpu_max and s >= 0.0:
                 # step 3: still rising -> data throttling to disk
                 action = "throttle"
+                reason = "load"
         else:
             # step 4: push; step 5: recover latency by shrinking
             if beta - cfg.theta2 * beta >= cfg.beta_min:
@@ -191,10 +218,28 @@ class BufferController:
         # (the adaptive probe budget may have grown meanwhile).
         if self.perfmon.dropped_inserts > 0 and action in ("push", "drain+push"):
             action = "throttle"
+            reason = "pressure"
+            self.pressure_throttles += 1
             self.perfmon.dropped_inserts = 0
 
         self.beta = max(cfg.beta_min, min(beta, cfg.beta_max))
-        return ControllerDecision(action, self.beta, beta_e, mu_exp, s)
+        dec = ControllerDecision(action, self.beta, beta_e, mu_exp, s, reason)
+        self.decision_counts[action] += 1
+        if self.on_decision is not None:
+            self.on_decision(dec)
+        return dec
+
+    def observe_sketch(self, payload: Dict):
+        """Policy hook for MetricsHub "sketch" events (QuerySink): turn
+        the heavy-hitter table into a concentration signal — the mass
+        the top-k nodes hold of everything the sketch absorbed — and
+        feed it to PerfMon as a diversity hint (sketch-guided control)."""
+        absorbed = float(payload.get("absorbed", 0) or 0)
+        hh = payload.get("hh_counts") or []
+        if absorbed <= 0 or not len(hh):
+            return
+        conc = float(np.clip(float(np.sum(hh)) / absorbed, 0.0, 1.0))
+        self.perfmon.observe_sketch(conc)
 
     def record(self, sample: PerfSample):
         self.trace.append(sample)

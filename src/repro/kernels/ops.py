@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import bloom as _bloom
 from repro.kernels import edge_dedup as _dedup
 from repro.kernels import flash_attention as _flash
+from repro.kernels import sampler as _sampler
 from repro.kernels import sketch as _sketch
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import upsert as _upsert
@@ -64,6 +65,17 @@ def fused_upsert(table_keys, keys, valid, n_probes, use_kernel=None):
         return _upsert.fused_upsert(table_keys, keys, valid, n_probes,
                                     interpret=_INTERP)
     return _upsert.fused_upsert_ref(table_keys, keys, valid, n_probes)
+
+
+def traffic_sample(seed, ctr0, n: int, iparams, fparams, use_kernel=None):
+    """Counter-based traffic-id block for the workload generator
+    (repro.workloads): (uid, tag, mention, u_dup, u_dupi).  One fused
+    sampling launch per block; deterministic in (seed, ctr0)."""
+    use_kernel = ON_TPU if use_kernel is None else use_kernel
+    if use_kernel:
+        return _sampler.traffic_ids(seed, ctr0, n, iparams, fparams,
+                                    interpret=_INTERP)
+    return _sampler.traffic_ids_ref(seed, ctr0, n, iparams, fparams)
 
 
 def sketch_scatter(edge_w, out_deg, in_deg, r, c, cnt):

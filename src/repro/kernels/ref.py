@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.sampler import traffic_ids_ref  # noqa: F401 (re-export)
 from repro.kernels.upsert import fused_upsert_ref  # noqa: F401 (re-export)
 
 # ---------------------------------------------------------------------------

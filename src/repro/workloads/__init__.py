@@ -1,0 +1,38 @@
+"""Bursty social-media scenario generator + closed-loop evaluation.
+
+The workload subsystem turns the repo from "ingests one stream" into
+"evaluated across a family of adversarial streams":
+
+  * `repro.workloads.samplers` — jit-compiled, counter-based traffic
+    processes (Hawkes self-excitation, diurnal cycles, flash-crowd
+    steps, multiplicative jitter),
+  * `repro.kernels.sampler`    — the fused per-record id kernel (Zipf
+    heavy-hitter users, hot-topic hashtag mixing, retweet-cascade
+    mentions) with a bit-exact jnp oracle,
+  * `Scenario` / `register` / `get_scenario` / `list_scenarios` — the
+    named registry (steady_state, flash_crowd, celebrity_cascade,
+    diurnal, spam_storm, election_night, plus yours),
+  * `ScenarioSource`           — a `Source`-protocol adapter usable
+    anywhere a `BurstyTweetSource` is (PipelineBuilder, sharded),
+  * `run_scenario` / `WorkloadReport` — the closed-loop harness that
+    scores the Algorithm-2 controller per scenario (throughput,
+    spills, buffer-mode transitions, table-pressure throttles).
+
+CLI: `python -m repro.launch.workload --scenario flash_crowd`.
+"""
+from repro.workloads.scenarios import (
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    register,
+)
+from repro.workloads.source import ScenarioSource
+from repro.workloads.harness import WorkloadReport, run_scenario
+from repro.workloads.samplers import RateChunk, rate_trajectory
+
+__all__ = [
+    "Scenario", "register", "get_scenario", "list_scenarios",
+    "ScenarioSource",
+    "WorkloadReport", "run_scenario",
+    "RateChunk", "rate_trajectory",
+]

@@ -1,0 +1,203 @@
+"""Closed-loop controller evaluation harness.
+
+`run_scenario` drives a full pipeline (single-shard or sharded)
+through a registry scenario and condenses the run into a structured
+`WorkloadReport`: sustained throughput, drop/spill/drain counts, the
+Algorithm-2 buffer-mode transition timeline, and the table-pressure
+throttles the PR-3 fused-upsert path surfaces.  It is the one place
+that turns "the pipeline survived" into per-scenario numbers — the
+CLI (`python -m repro.launch.workload`), the benchmark suite
+(`benchmarks.bench_workloads` -> BENCH_ingest.json) and the e2e tests
+all call it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.api import PipelineBuilder
+from repro.configs.paper_ingest import IngestConfig
+from repro.workloads.scenarios import Scenario, get_scenario
+from repro.workloads.source import ScenarioSource
+
+
+@dataclasses.dataclass
+class WorkloadReport:
+    """Structured result of one scenario run (JSON-safe via to_dict)."""
+
+    scenario: str
+    seed: int
+    ticks: int
+    shards: int
+    sketch_guided: bool
+    wall_s: float
+    stream_s: float
+    total_records: int
+    records_per_stream_s: float  # sustained throughput in stream time
+    records_per_wall_s: float    # what this host actually sustained
+    total_instructions: int
+    raw_instructions: int
+    mean_compression: float
+    spill_events: int
+    drain_events: int
+    dropped_inserts: int         # store-table inserts lost under pressure
+    pressure_throttles: int      # one-shot table-pressure throttles fired
+    action_counts: Dict[str, int]
+    transitions: List[Dict]      # [{t, shard, from, to}] buffer-mode timeline
+    mu_mean: float
+    mu_p95: float
+    mu_max: float
+    delay_max_s: float
+    store_nodes: int
+    store_edges: int
+
+    @property
+    def n_transitions(self) -> int:
+        return len(self.transitions)
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["n_transitions"] = self.n_transitions
+        return json.loads(json.dumps(d, default=float))  # force JSON-safe
+
+    def summary(self) -> str:
+        acts = " ".join(f"{k}={v}" for k, v in sorted(self.action_counts.items()))
+        return (
+            f"scenario={self.scenario} ticks={self.ticks} shards={self.shards}\n"
+            f"records={self.total_records} "
+            f"({self.records_per_stream_s:.1f}/s stream, "
+            f"{self.records_per_wall_s:.1f}/s wall) "
+            f"instructions={self.total_instructions} "
+            f"(raw {self.raw_instructions}, cr {self.mean_compression:.3f})\n"
+            f"mu: mean={self.mu_mean:.3f} p95={self.mu_p95:.3f} "
+            f"max={self.mu_max:.3f} delay_max={self.delay_max_s:.1f}s\n"
+            f"control: {acts} | transitions={self.n_transitions} "
+            f"spills={self.spill_events} drains={self.drain_events} "
+            f"pressure_throttles={self.pressure_throttles} "
+            f"dropped_inserts={self.dropped_inserts}\n"
+            f"store: {self.store_nodes} nodes, {self.store_edges} edges"
+        )
+
+
+def _timeline(samples: Dict, actions: List[str], shard: int) -> List[Dict]:
+    """Buffer-mode transitions from one pipeline trace."""
+    ts = samples.get("t", np.asarray([]))
+    out = []
+    for i in range(1, len(actions)):
+        if actions[i] != actions[i - 1]:
+            out.append({"t": float(ts[i]) if i < len(ts) else float(i),
+                        "shard": shard,
+                        "from": actions[i - 1], "to": actions[i]})
+    return out
+
+
+def run_scenario(
+    scenario: Union[Scenario, str],
+    *,
+    ticks: Optional[int] = None,
+    seed: int = 0,
+    cfg: Optional[IngestConfig] = None,
+    shards: int = 1,
+    speed: float = 0.5,
+    rate_scale: float = 1.0,
+    sketch_guided: bool = False,
+    node_cap: Optional[int] = None,
+    edge_cap: Optional[int] = None,
+    spill_dir: Optional[str] = None,
+    on_event=None,
+) -> WorkloadReport:
+    """Drive a pipeline through `scenario` and report (module docstring).
+
+    `speed` scales the simulated consumer (0.5 = the paper's half-
+    capacity store engine, the setting that makes bursts bite);
+    `node_cap`/`edge_cap` shrink the store for CI-sized runs.
+    """
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    ticks = int(ticks if ticks is not None else scn.ticks)
+    if cfg is None:
+        cfg = IngestConfig(
+            mean_rate=scn.base_rate,
+            store_nodes=node_cap or IngestConfig.store_nodes,
+            store_edges=edge_cap or IngestConfig.store_edges,
+        )
+    elif node_cap or edge_cap:
+        # explicit caps always win, also over a caller-supplied cfg
+        cfg = dataclasses.replace(
+            cfg,
+            store_nodes=node_cap or cfg.store_nodes,
+            store_edges=edge_cap or cfg.store_edges,
+        )
+    src = ScenarioSource(scn, seed=seed, rate_scale=rate_scale)
+    dropped = [0]
+
+    def _count_drops(ev):
+        if ev.kind == "commit":
+            dropped[0] += int(ev.payload.get("dropped", 0))
+
+    b = (PipelineBuilder(cfg)
+         .with_source(src)
+         .simulated_consumer(speed=speed)
+         .spill_dir(spill_dir or f"/tmp/repro_workload_{scn.name}_{seed}")
+         .on_event(_count_drops))
+    if sketch_guided:
+        b = b.sketch_guided()
+    if shards > 1:
+        b = b.sharded(shards)
+    if on_event is not None:
+        b = b.on_event(on_event)
+    pipe = b.build()
+    rep = pipe.run(max_ticks=ticks)
+
+    if shards > 1:
+        sub = rep.shards
+        mu = np.concatenate([r.samples["mu"] for r in sub]) \
+            if sub else np.asarray([0.0])
+        delay = np.concatenate([r.samples["delay_s"] for r in sub]) \
+            if sub else np.asarray([0.0])
+        transitions = [tr for si, r in enumerate(sub)
+                       for tr in _timeline(r.samples, r.actions, si)]
+        transitions.sort(key=lambda tr: tr["t"])
+        controllers = [s.controller for s in pipe.shards]
+        actions: List[str] = [a for r in sub for a in r.actions]
+    else:
+        mu = rep.samples["mu"] if len(rep.samples["mu"]) else np.asarray([0.0])
+        delay = rep.samples["delay_s"] if len(rep.samples["delay_s"]) \
+            else np.asarray([0.0])
+        transitions = _timeline(rep.samples, rep.actions, 0)
+        controllers = [pipe.buffer_stage.controller]
+        actions = list(rep.actions)
+
+    counts: Dict[str, int] = {}
+    for a in actions:
+        counts[a] = counts.get(a, 0) + 1
+    store = pipe.store
+    return WorkloadReport(
+        scenario=scn.name,
+        seed=seed,
+        ticks=ticks,
+        shards=shards,
+        sketch_guided=sketch_guided,
+        wall_s=float(rep.wall_s),
+        stream_s=float(ticks * src.dt),
+        total_records=int(rep.total_records),
+        records_per_stream_s=rep.total_records / max(ticks * src.dt, 1e-9),
+        records_per_wall_s=rep.total_records / max(rep.wall_s, 1e-9),
+        total_instructions=int(rep.total_instructions),
+        raw_instructions=int(rep.raw_instructions),
+        mean_compression=float(rep.mean_compression),
+        spill_events=int(rep.spill_events),
+        drain_events=int(rep.drain_events),
+        dropped_inserts=dropped[0],
+        pressure_throttles=sum(c.pressure_throttles for c in controllers),
+        action_counts=counts,
+        transitions=transitions,
+        mu_mean=float(mu.mean()),
+        mu_p95=float(np.percentile(mu, 95)),
+        mu_max=float(mu.max()),
+        delay_max_s=float(delay.max()),
+        store_nodes=int(store.n_nodes),
+        store_edges=int(store.n_edges),
+    )

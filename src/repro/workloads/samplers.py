@@ -1,0 +1,95 @@
+"""Jittable traffic-rate trajectory samplers (counter-based PRNG).
+
+One jit-compiled scan produces a chunk of per-tick (intensity, count)
+pairs combining every burst mechanism real social streams exhibit:
+
+  * diurnal cycle     — sinusoidal envelope (compressed "day"),
+  * flash crowd       — a step at `flash_t` of height `flash_mult`
+    relaxing exponentially with time constant `flash_decay` (the
+    breaking-news shape of the paper's >250% velocity spikes),
+  * Hawkes self-excitation — every event raises future intensity by
+    alpha * beta * exp(-beta * dt) (branching ratio ~alpha): retweet
+    storms where volume feeds on itself, the mechanism behind the
+    heavy burst tails GraphTango-style evaluations stress,
+  * multiplicative noise — the paper's 15-45% tick-to-tick jitter.
+
+Counts are drawn per tick with the same counter-based PRNG as the id
+kernel (`repro.kernels.sampler.counter_mix`), via a Gaussian
+approximation to Poisson(lam) — exact enough above lam ~ 10 and fully
+vectorisable; the whole trajectory is a pure function of (seed, t0,
+excite0), so chunks compose deterministically: generating 4 chunks of
+64 ticks is bit-identical to one chunk of 256.
+
+All rates are non-negative by construction (tests assert the
+invariant under hypothesis-driven parameter sweeps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sampler import counter_mix, uniform01
+
+# rate draws salt the seed so tick counters never collide with the
+# per-record lanes of the id kernel (which use the unsalted seed)
+RATE_SALT = 0xA511CE5
+_TWO_PI = 6.2831853
+
+
+class RateChunk(NamedTuple):
+    rates: jax.Array   # (ticks,) float32 realised intensity lambda_k
+    env: jax.Array     # (ticks,) float32 deterministic envelope (no Hawkes/noise)
+    counts: jax.Array  # (ticks,) int32 records per tick
+    excite: jax.Array  # scalar float32 Hawkes state to carry into the next chunk
+
+
+def _normal(seed, ctr):
+    """One standard normal per lane (Box-Muller on counter draws)."""
+    u1 = uniform01(counter_mix(seed, ctr))
+    u2 = uniform01(counter_mix(seed, ctr + jnp.uint32(1)))
+    r = jnp.sqrt(-2.0 * jnp.log(jnp.maximum(1.0 - u1, 1e-7)))
+    return r * jnp.cos(_TWO_PI * u2)
+
+
+@functools.partial(jax.jit, static_argnames=("ticks",))
+def rate_trajectory(seed, ticks: int, t0, excite0, base_rate, noise_frac,
+                    hawkes_alpha, hawkes_beta, diurnal_amp, diurnal_period,
+                    flash_t, flash_mult, flash_decay, rate_cap, dt=1.0):
+    """One chunk of the tick-rate process (see module docstring).
+
+    t0 is the absolute tick index of the chunk start; excite0 the
+    Hawkes state carried from the previous chunk (0.0 at stream
+    start).  Returns a `RateChunk`.
+    """
+    seed = jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(RATE_SALT)
+    idx = jnp.arange(ticks, dtype=jnp.int32)
+    tick_abs = jnp.asarray(t0, jnp.int32) + idx
+    t = tick_abs.astype(jnp.float32) * dt
+
+    env = base_rate * (1.0 + diurnal_amp * jnp.sin(_TWO_PI * t / diurnal_period))
+    flash = jnp.where(
+        t >= flash_t,
+        1.0 + (flash_mult - 1.0) * jnp.exp(-(t - flash_t) / flash_decay),
+        1.0)
+    env = env * flash
+
+    g = jnp.exp(-hawkes_beta * dt)  # per-tick decay of the excitation state
+
+    def step(excite, inp):
+        env_k, k = inp
+        lam = env_k + hawkes_alpha * hawkes_beta * excite
+        ctr = k.astype(jnp.uint32) * jnp.uint32(4)
+        lam = lam * (1.0 + noise_frac * (2.0 * uniform01(counter_mix(seed, ctr)) - 1.0))
+        lam = jnp.clip(lam, 0.0, rate_cap)
+        z = _normal(seed, ctr + jnp.uint32(1))
+        c = jnp.maximum(jnp.round(lam * dt + jnp.sqrt(lam * dt) * z), 0.0)
+        c = jnp.minimum(c, rate_cap * dt).astype(jnp.int32)
+        excite = g * (excite + c.astype(jnp.float32))
+        return excite, (lam, c)
+
+    excite, (rates, counts) = jax.lax.scan(
+        step, jnp.asarray(excite0, jnp.float32), (env, tick_abs))
+    return RateChunk(rates=rates, env=env, counts=counts, excite=excite)

@@ -1,0 +1,121 @@
+"""`ScenarioSource` — a registry scenario as a pipeline `Source`.
+
+Drives the composable ingestion API (`PipelineBuilder`, sharded or
+not) with the bursty traffic a named `Scenario` describes.  Device
+work happens in two jit-compiled strides so record synthesis never
+bottlenecks ingest:
+
+  * tick rates/counts come from `rate_trajectory` one CHUNK of ticks
+    at a time (Hawkes state carried across chunks, bit-identical to
+    one long chunk),
+  * record ids come from the fused counter-based sampling kernel
+    (`repro.kernels.ops.traffic_sample`) one fixed-size block per
+    tick, so shapes are static and the trace compiles once.
+
+Everything downstream of (scenario, seed) is deterministic: two
+sources with equal arguments yield byte-identical record streams, and
+the per-tick hot-topic share follows the realised intensity (burst
+level b = 1 - base/lambda), so content diversity collapses exactly
+when volume spikes — the correlation Algorithm 2's compression
+predictor feeds on.
+
+Records are tweet-shaped dicts (`id`/`user`/`hashtags`/`mentions`/
+`text`/`ts`) compatible with `tweet_mapping` and the two-stage filter.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Iterator, List, Optional, Union
+
+import numpy as np
+
+from repro.ingest.sources import StreamTick
+from repro.kernels.sampler import NSTREAMS
+from repro.workloads.samplers import rate_trajectory
+from repro.workloads.scenarios import Scenario, get_scenario
+
+CHUNK = 64  # ticks of rate trajectory per device call
+
+
+class ScenarioSource:
+    """Source-protocol adapter over a named (or inline) `Scenario`."""
+
+    def __init__(self, scenario: Union[Scenario, str], seed: int = 0,
+                 dt: float = 1.0, block: int = 2048,
+                 rate_scale: float = 1.0, use_kernel: Optional[bool] = None,
+                 recent_window: int = 500):
+        self.scenario = (get_scenario(scenario)
+                         if isinstance(scenario, str) else scenario)
+        self.seed = int(seed)
+        self.dt = float(dt)
+        self.block = int(block)
+        self.rate_scale = float(rate_scale)
+        self.use_kernel = use_kernel
+        self.t = 0.0
+        self._tick_no = 0
+        self._rec_no = 0     # record counter: ids AND PRNG lane base
+        self._excite = 0.0   # Hawkes carry across trajectory chunks
+        self._recent: collections.deque = collections.deque(maxlen=recent_window)
+
+    # ------------------------------------------------------------------
+    def _sample_ids(self, n: int, burst_level: float):
+        """n record-id tuples from the fused kernel (blocked, padded)."""
+        from repro.kernels import ops
+
+        scn = self.scenario
+        ip, fp = scn.iparams(), scn.fparams(burst_level)
+        out = []
+        taken = 0
+        while taken < n:
+            # uint32 counter space wraps for streams past ~500M records
+            ctr0 = np.uint32(((self._rec_no + taken) * NSTREAMS) & 0xFFFFFFFF)
+            cols = ops.traffic_sample(np.uint32(self.seed), ctr0, self.block,
+                                      ip, fp, use_kernel=self.use_kernel)
+            k = min(self.block, n - taken)
+            out.append([np.asarray(c)[:k] for c in cols])
+            taken += k
+        return [np.concatenate(parts) for parts in zip(*out)]
+
+    def _materialise(self, n: int, burst_level: float) -> List[dict]:
+        scn = self.scenario
+        uid, tag, mention, u_dup, u_dupi = self._sample_ids(n, burst_level)
+        recs: List[dict] = []
+        for i in range(n):
+            self._rec_no += 1
+            if self._recent and float(u_dup[i]) < scn.duplicate_frac:
+                j = int(float(u_dupi[i]) * len(self._recent))
+                recs.append(dict(self._recent[min(j, len(self._recent) - 1)]))
+                continue
+            rec = {
+                "id": f"t{self._rec_no}",
+                "user": f"u{int(uid[i])}",
+                "hashtags": [f"h{int(tag[i])}"],
+                "mentions": [f"u{int(mention[i])}"],
+                "text": f"{scn.name} record {self._rec_no}",
+                "ts": self.t,
+            }
+            recs.append(rec)
+            self._recent.append(rec)
+        return recs
+
+    # ------------------------------------------------------------------
+    def ticks(self) -> Iterator[StreamTick]:
+        scn = self.scenario
+        base = scn.base_rate * self.rate_scale
+        while True:
+            chunk = rate_trajectory(
+                np.uint32(self.seed), CHUNK, self._tick_no, self._excite,
+                base, scn.noise_frac, scn.hawkes_alpha, scn.hawkes_beta,
+                scn.diurnal_amp, scn.diurnal_period, scn.flash_t,
+                scn.flash_mult, scn.flash_decay, scn.rate_cap_mult * base,
+                dt=self.dt)
+            rates = np.asarray(chunk.rates)
+            counts = np.asarray(chunk.counts)
+            self._excite = float(chunk.excite)
+            self._tick_no += CHUNK
+            for lam, c in zip(rates, counts):
+                # burst level in [0,1): 0 at baseline, ->1 as lam >> base;
+                # drives the hot-topic share (diversity drops in bursts)
+                b = max(0.0, 1.0 - base / max(float(lam), base))
+                self.t += self.dt
+                yield StreamTick(self.t, self._materialise(int(c), b))

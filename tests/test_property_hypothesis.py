@@ -100,6 +100,73 @@ def test_controller_always_in_bounds_and_total(mus, sizes):
 
 
 # ---------------------------------------------------------------------------
+# workload sampler invariants (repro.workloads)
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    alpha=st.floats(min_value=0.0, max_value=0.9),
+    amp=st.floats(min_value=0.0, max_value=0.9),
+    flash_mult=st.floats(min_value=1.0, max_value=10.0),
+    noise=st.floats(min_value=0.0, max_value=0.45),
+)
+def test_workload_rates_nonnegative_and_deterministic(
+        seed, alpha, amp, flash_mult, noise):
+    """Trajectory invariants: rates finite and >= 0, counts in
+    [0, cap], and the whole chunk a pure function of the seed."""
+    from repro.workloads import rate_trajectory
+
+    args = (64, 0, 0.0, 60.0, noise, alpha, 0.5, amp, 120.0, 20.0,
+            flash_mult, 30.0, 3000.0)
+    ch = rate_trajectory(np.uint32(seed), *args)
+    rates, counts = np.asarray(ch.rates), np.asarray(ch.counts)
+    assert np.isfinite(rates).all() and (rates >= 0).all()
+    assert (counts >= 0).all() and (counts <= 3000).all()
+    again = rate_trajectory(np.uint32(seed), *args)
+    np.testing.assert_array_equal(np.asarray(again.counts), counts)
+
+
+@settings(**_settings)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    a=st.floats(min_value=1.2, max_value=2.5),
+    n=st.integers(min_value=100, max_value=5000),
+)
+def test_workload_zipf_skew_bounds(seed, a, n):
+    """Zipf ranks stay in [0, n) and the top decile holds at least
+    ~70% of its bounded-Pareto mass (heavy-hitter skew)."""
+    from repro.kernels.sampler import counter_mix, uniform01, zipf_rank
+
+    ctr = np.arange(4096, dtype=np.uint32)
+    u = uniform01(counter_mix(np.uint32(seed), ctr))
+    r = np.asarray(zipf_rank(u, n, a))
+    assert r.min() >= 0 and r.max() < n
+    top = max(n // 10, 1)
+    share = float((r < top).mean())
+    expect = ((top + 1) ** (1 - a) - 1) / ((n + 1) ** (1 - a) - 1)
+    assert share >= 0.7 * expect
+    assert share > 0.3
+
+
+@settings(**_settings)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_workload_hawkes_burstier_than_poisson(seed):
+    """Self-excitation must raise the Fano factor above the alpha=0
+    Poisson-like baseline at matched parameters."""
+    from repro.workloads import rate_trajectory
+
+    def fano(alpha):
+        ch = rate_trajectory(np.uint32(seed), 256, 0, 0.0, 60.0, 0.0,
+                             alpha, 0.4, 0.0, 240.0, 1e9, 1.0, 40.0, 6000.0)
+        c = np.asarray(ch.counts, np.float64)
+        return c.var() / max(c.mean(), 1e-9)
+
+    assert fano(0.85) > fano(0.0)
+
+
+# ---------------------------------------------------------------------------
 # quantisation error bound
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,276 @@
+"""Workload subsystem tests: samplers (kernel parity, determinism,
+skew/burstiness bounds), scenario registry, ScenarioSource, the
+closed-loop harness (e2e controller transitions), sketch-guided
+control, and the BENCH_ingest.json merge-append format.
+
+Hypothesis-driven parameter sweeps over the same invariants live in
+tests/test_property_hypothesis.py (guarded on the hypothesis import);
+the checks here are deterministic so they run everywhere."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.sampler import (
+    counter_mix,
+    traffic_ids,
+    traffic_ids_ref,
+    uniform01,
+    zipf_rank,
+)
+from repro.workloads import (
+    Scenario,
+    ScenarioSource,
+    get_scenario,
+    list_scenarios,
+    rate_trajectory,
+    register,
+    run_scenario,
+)
+
+# ---------------------------------------------------------------------------
+# sampler kernel: oracle parity + counter-PRNG determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario,burst", [("flash_crowd", 0.0),
+                                            ("spam_storm", 0.9)])
+def test_traffic_kernel_bit_exact(scenario, burst):
+    scn = get_scenario(scenario)
+    ip, fp = scn.iparams(), scn.fparams(burst)
+    ref = traffic_ids_ref(np.uint32(11), np.uint32(640), 256, ip, fp)
+    ker = traffic_ids(np.uint32(11), np.uint32(640), 256, ip, fp,
+                      interpret=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_counter_prng_deterministic_and_stream_disjoint():
+    ctr = np.arange(512, dtype=np.uint32)
+    a = np.asarray(counter_mix(np.uint32(5), ctr))
+    b = np.asarray(counter_mix(np.uint32(5), ctr))
+    c = np.asarray(counter_mix(np.uint32(6), ctr))
+    np.testing.assert_array_equal(a, b)
+    assert (a != c).mean() > 0.99  # different seeds decorrelate
+    u = np.asarray(uniform01(counter_mix(np.uint32(5), ctr)))
+    assert (u >= 0).all() and (u < 1).all()
+    assert 0.3 < u.mean() < 0.7
+
+
+# ---------------------------------------------------------------------------
+# sampler invariants (deterministic spot checks; hypothesis sweeps of
+# the same properties live in test_property_hypothesis.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed,a,n", [(0, 1.2, 100), (7, 1.3, 1000),
+                                      (42, 2.5, 5000)])
+def test_zipf_skew_bounds(seed, a, n):
+    """Ranks stay in [0, n); the top decile holds at least ~70% of the
+    bounded-Pareto mass it should (heavy-hitter skew), far above the
+    uniform 10%."""
+    ctr = np.arange(4096, dtype=np.uint32)
+    u = uniform01(counter_mix(np.uint32(seed), ctr))
+    r = np.asarray(zipf_rank(u, n, a))
+    assert r.min() >= 0 and r.max() < n
+    top = max(n // 10, 1)
+    share = float((r < top).mean())
+    # theoretical bounded-Pareto mass below rank n/10
+    expect = ((top + 1) ** (1 - a) - 1) / ((n + 1) ** (1 - a) - 1)
+    assert share >= 0.7 * expect
+    assert share > 0.3  # always much more skewed than uniform
+
+
+@pytest.mark.parametrize("scenario", ["flash_crowd", "diurnal"])
+def test_rates_nonnegative_and_chunks_compose(scenario):
+    scn = get_scenario(scenario)
+    args = (scn.base_rate, scn.noise_frac, scn.hawkes_alpha, scn.hawkes_beta,
+            scn.diurnal_amp, scn.diurnal_period, scn.flash_t, scn.flash_mult,
+            scn.flash_decay, scn.rate_cap_mult * scn.base_rate)
+    full = rate_trajectory(np.uint32(5), 128, 0, 0.0, *args)
+    rates, counts = np.asarray(full.rates), np.asarray(full.counts)
+    assert np.isfinite(rates).all() and (rates >= 0).all()
+    assert (counts >= 0).all()
+    # two 64-tick chunks with carried Hawkes state == one 128-tick chunk
+    c1 = rate_trajectory(np.uint32(5), 64, 0, 0.0, *args)
+    c2 = rate_trajectory(np.uint32(5), 64, 64, c1.excite, *args)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(c1.counts), np.asarray(c2.counts)]), counts)
+
+
+def test_hawkes_burstier_than_poisson_baseline():
+    """Fano factor (var/mean of per-tick counts) under strong
+    self-excitation far exceeds the Poisson-like alpha=0 baseline."""
+    def fano(alpha, seed):
+        ch = rate_trajectory(np.uint32(seed), 512, 0, 0.0, 60.0, 0.0,
+                             alpha, 0.4, 0.0, 240.0, 1e9, 1.0, 40.0, 6000.0)
+        c = np.asarray(ch.counts, np.float64)
+        return c.var() / max(c.mean(), 1e-9)
+
+    f_hawkes = np.mean([fano(0.85, s) for s in (0, 1, 2)])
+    f_poisson = np.mean([fano(0.0, s) for s in (0, 1, 2)])
+    assert f_poisson < 1.5  # near-Poisson dispersion
+    assert f_hawkes > 1.7 * f_poisson
+    assert f_hawkes > 1.5  # clearly overdispersed
+
+
+def test_burst_level_concentrates_topics():
+    """At burst level 1 the hot-topic share dwarfs the calm share —
+    content diversity collapses exactly when volume spikes."""
+    scn = get_scenario("flash_crowd")
+    ip = scn.iparams()
+
+    def hot_share(burst):
+        _, tag, _, _, _ = ops.traffic_sample(
+            np.uint32(3), np.uint32(0), 4096, ip, scn.fparams(burst))
+        t = np.asarray(tag)
+        hot = (t >= scn.topic_base) & (t < scn.topic_base + scn.burst_ntags)
+        return float(hot.mean())
+
+    assert hot_share(1.0) > hot_share(0.0) + 0.3
+    assert hot_share(1.0) > 0.6
+
+
+# ---------------------------------------------------------------------------
+# registry + source
+# ---------------------------------------------------------------------------
+
+
+def test_registry_ships_named_scenarios():
+    names = [s.name for s in list_scenarios()]
+    for required in ("steady_state", "flash_crowd", "celebrity_cascade",
+                     "diurnal", "spam_storm"):
+        assert required in names
+    assert len(names) >= 5
+    with pytest.raises(KeyError):
+        get_scenario("no_such_scenario")
+    custom = Scenario(name="test_custom", description="x", base_rate=10.0)
+    register(custom)
+    try:
+        assert get_scenario("test_custom") is custom
+        with pytest.raises(ValueError):
+            register(Scenario(name="test_custom", description="dup"))
+    finally:
+        from repro.workloads.scenarios import _REGISTRY
+
+        _REGISTRY.pop("test_custom", None)
+
+
+def test_scenario_source_satisfies_source_protocol():
+    from repro.api.protocols import Source
+    from repro.ingest.sources import StreamTick
+
+    src = ScenarioSource("steady_state", seed=1)
+    assert isinstance(src, Source)
+    tick = next(src.ticks())
+    assert isinstance(tick, StreamTick)
+    assert tick.records, "steady_state must emit records on tick 1"
+    rec = tick.records[0]
+    for key in ("id", "user", "hashtags", "mentions", "ts"):
+        assert key in rec
+
+
+def test_scenario_source_seed_deterministic():
+    def first_ticks(seed):
+        src = ScenarioSource("celebrity_cascade", seed=seed)
+        it = src.ticks()
+        return [next(it).records for _ in range(5)]
+
+    assert first_ticks(9) == first_ticks(9)
+    a = [r["id"] for t in first_ticks(9) for r in t]
+    b = [r["id"] for t in first_ticks(10) for r in t]
+    assert a != b or len(a) != len(b)
+
+
+def test_spam_storm_duplicates():
+    src = ScenarioSource("spam_storm", seed=2)
+    it = src.ticks()
+    recs = [r for _ in range(8) for r in next(it).records]
+    ids = [r["id"] for r in recs]
+    dup_frac = 1.0 - len(set(ids)) / max(len(ids), 1)
+    assert dup_frac > 0.25  # scenario asks for ~50% duplicates
+
+
+# ---------------------------------------------------------------------------
+# closed-loop harness (e2e) + sketch-guided control
+# ---------------------------------------------------------------------------
+
+
+def test_harness_flash_crowd_forces_mode_transitions(tmp_path):
+    rep = run_scenario("flash_crowd", ticks=50, seed=3, speed=0.5,
+                       node_cap=1 << 12, edge_cap=1 << 14,
+                       spill_dir=str(tmp_path / "spill"))
+    assert rep.total_records > 0
+    assert rep.n_transitions >= 1, "flash crowd must force >=1 buffer-mode transition"
+    moved = {tr["to"] for tr in rep.transitions} | {tr["from"] for tr in rep.transitions}
+    assert moved - {"push"}, "controller must leave push mode"
+    # a timeline of K transitions needs at least K+1 recorded actions
+    assert sum(rep.action_counts.values()) >= rep.n_transitions + 1
+    d = rep.to_dict()
+    json.dumps(d)  # report must be JSON-serialisable
+    assert d["n_transitions"] == rep.n_transitions
+
+
+def test_harness_steady_state_stays_calm(tmp_path):
+    rep = run_scenario("steady_state", ticks=40, seed=3, speed=1.0,
+                       node_cap=1 << 13, edge_cap=1 << 15,
+                       spill_dir=str(tmp_path / "spill"))
+    assert rep.total_records > 0
+    assert rep.action_counts.get("push", 0) >= 0.8 * sum(rep.action_counts.values())
+    assert rep.spill_events == 0
+
+
+def test_sketch_guided_control_feeds_controller(tmp_path):
+    from repro.api import PipelineBuilder
+    from repro.configs.paper_ingest import IngestConfig
+
+    cfg = IngestConfig(store_nodes=1 << 12, store_edges=1 << 14)
+    pipe = (PipelineBuilder(cfg)
+            .with_source(ScenarioSource("steady_state", seed=5))
+            .simulated_consumer(speed=1.0)
+            .sketch_guided()
+            .spill_dir(str(tmp_path / "spill"))
+            .build())
+    pipe.run(max_ticks=30)
+    pm = pipe.buffer_stage.controller.perfmon
+    assert pm.sketch_rho is not None, "sketch events must reach the controller"
+    assert 0.0 <= pm.sketch_rho <= 1.0
+
+
+def test_controller_observability_counters(tmp_path):
+    rep = run_scenario("flash_crowd", ticks=50, seed=3, speed=0.5,
+                       node_cap=1 << 11, edge_cap=1 << 12,
+                       spill_dir=str(tmp_path / "spill"))
+    # the tiny store saturates under the flash: the table-pressure
+    # one-shot must fire and be observable
+    assert rep.pressure_throttles >= 1
+    assert rep.dropped_inserts > 0
+
+
+# ---------------------------------------------------------------------------
+# BENCH_ingest.json merge-append
+# ---------------------------------------------------------------------------
+
+
+def test_merge_bench_ingest_appends_runs(tmp_path):
+    from benchmarks.run import merge_bench_ingest
+
+    path = str(tmp_path / "BENCH_ingest.json")
+    assert merge_bench_ingest(path, {"store_ingest": {"x": 1}}) == 1
+    assert merge_bench_ingest(path, {"store_ingest": {"x": 2}}) == 2
+    data = json.load(open(path))
+    assert [r["run"] for r in data["runs"]] == [0, 1]
+    assert data["runs"][1]["benches"]["store_ingest"]["x"] == 2
+
+
+def test_merge_bench_ingest_wraps_legacy(tmp_path):
+    from benchmarks.run import merge_bench_ingest
+
+    path = str(tmp_path / "BENCH_ingest.json")
+    with open(path, "w") as f:
+        json.dump({"ingest_trajectory": {"rows": []}}, f)
+    assert merge_bench_ingest(path, {"store_ingest": {}}) == 2
+    data = json.load(open(path))
+    assert data["runs"][0]["note"] == "legacy single-run format"
+    assert "ingest_trajectory" in data["runs"][0]["benches"]
