@@ -27,6 +27,8 @@ from repro.core.transform import MappingSpec
 
 # placeholder in the stage list for a build-time-constructed SketchStage
 _SKETCH_SLOT = object()
+# placeholder for a build-time-constructed DictionaryStage (repro.compress)
+_DICT_SLOT = object()
 
 
 class PipelineBuilder:
@@ -52,6 +54,8 @@ class PipelineBuilder:
         self._sketch_kw = {}
         self._query_sink_opts = None
         self._sketch_guided = False
+        self._dict_stage = None
+        self._compression_kw = None
 
     # ---- parts ----
     def with_source(self, source) -> "PipelineBuilder":
@@ -112,6 +116,25 @@ class PipelineBuilder:
         `with_query_sink()` when one wasn't configured."""
         self._sketch_guided = flag
         return self
+
+    def with_compression(self, stage=None, **kw) -> "PipelineBuilder":
+        """Ingestion-time dictionary compression (repro.compress, the
+        paper's GraphZip layer): mines star/cascade patterns per bucket,
+        rewrites recurring edges into `(pattern_id, bindings)` references
+        against a device-resident dictionary, and commits them through
+        the pattern-aware GRAPHPUSH path (`commit_compressed`).  When no
+        stage is passed one is created at build time from the keyword
+        args (capacity, star_min, hot_min, ttl, use_kernel); retrieve it
+        via `.dictionary_stage` after build()."""
+        self._dict_stage = stage
+        self._compression_kw = dict(kw)
+        self._stages.append(_DICT_SLOT)
+        return self
+
+    @property
+    def dictionary_stage(self):
+        """The `DictionaryStage` added by `with_compression` (after build())."""
+        return self._dict_stage
 
     def with_consumer(self, consumer) -> "PipelineBuilder":
         self._consumer = consumer
@@ -179,6 +202,10 @@ class PipelineBuilder:
                                   self.cfg.max_edges_per_batch)
                     self._sketch_stage = SketchStage(**kw)
                 stages.append(self._sketch_stage)
+            elif st is _DICT_SLOT:
+                # materialised by build() before the pipeline exists
+                if self._dict_stage is not None:
+                    stages.append(self._dict_stage)
             else:
                 stages.append(st)
         return stages
@@ -210,6 +237,20 @@ class PipelineBuilder:
             from repro.query.stage import QuerySink
 
             sink = QuerySink(sink, hub=metrics, **qs_opts)
+        if self._compression_kw is not None:
+            from repro.compress import CompressingTransform, DictionaryStage
+
+            if self._dict_stage is None:
+                self._dict_stage = DictionaryStage(**self._compression_kw)
+            # rewrite happens in the transform (after Algorithm-1 encode);
+            # the dictionary learns from SUCCESSFUL commits only, via the
+            # ingestor's commit-hook fan-out (pooled/retried batches must
+            # still admit their patterns exactly once).  `.ingestor`
+            # passes through a QuerySink wrap.
+            transform = CompressingTransform(transform, self._dict_stage)
+            ingestor = getattr(sink, "ingestor", None)
+            if ingestor is not None and hasattr(ingestor, "commit_hooks"):
+                ingestor.commit_hooks.append(self._dict_stage.observe_commit)
 
         if self._n_shards > 1:
             if self._uncontrolled:

@@ -57,11 +57,17 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
                      instructions=n_instr, raw=raw_i, rho=rho, cr=cr,
                      dropped=out.get("dropped", 0),
                      probe_rounds=out.get("probe_rounds", 0),
-                     pressure=out.get("pressure", 0.0))
+                     pressure=out.get("pressure", 0.0),
+                     refs=out.get("refs", 0),
+                     dict_hit_rate=out.get("dict_hit_rate", 0.0))
             if committed:
                 # table pressure -> Algorithm-2 controller (back-pressure)
                 pm.observe_pressure(out.get("pressure", 0.0),
                                     out.get("dropped", 0))
+                if "dict_hit_rate" in out:
+                    # compressibility -> the controller's "data content"
+                    # input (dictionary compression, repro.compress)
+                    pm.observe_compression(out["dict_hit_rate"], cr)
             pm.observe_mu(mu)
             pm.observe_bucket(rho, float(et.density()), float(et.size()))
             pm.observe_mu_outcome(state["last_mu"], state["last_beta_e"], mu)
@@ -159,7 +165,9 @@ class StreamPipeline:
                           instructions=n_instr, raw=raw_instr, rho=rho, cr=cr,
                           dropped=out.get("dropped", 0),
                           probe_rounds=out.get("probe_rounds", 0),
-                          pressure=out.get("pressure", 0.0))
+                          pressure=out.get("pressure", 0.0),
+                          refs=out.get("refs", 0),
+                          dict_hit_rate=out.get("dict_hit_rate", 0.0))
         return et, mu, rho, cr, n_instr, raw_instr
 
     # ------------------------------------------------------------------

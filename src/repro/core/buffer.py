@@ -56,6 +56,11 @@ class PerfMon:
     # weight of the sketch's diversity hint when blended into rho
     # (the window-mean stays the anchor; the sketch refines it)
     SKETCH_RHO_WEIGHT = 0.5
+    # weight of the dictionary-compression hint when shrinking the
+    # predicted effective buffer: referenced edges commit by direct
+    # scatter (no probing), so a highly compressible bucket loads the
+    # consumer far less than its size suggests
+    COMPRESS_BETA_WEIGHT = 0.5
 
     def __init__(self, cfg: IngestConfig):
         self.cfg = cfg
@@ -71,6 +76,9 @@ class PerfMon:
         # sketch-guided diversity hint (None until a "sketch" event is
         # observed; then blended into predict()'s rho)
         self.sketch_rho: Optional[float] = None
+        # dictionary-compression hint (None until a compressed commit
+        # reports; the paper's "data content" signal, §III-A)
+        self.dict_hit: Optional[float] = None
 
     # ---- signal ingestion ----
     def observe_rate(self, t: float, records: float):
@@ -93,6 +101,15 @@ class PerfMon:
         strong and the effective buffer small.  Stored as a diversity
         hint rho ~ 1 - concentration and blended in `predict`."""
         self.sketch_rho = float(np.clip(1.0 - concentration, 0.0, 1.0))
+
+    def observe_compression(self, hit_rate: float, ratio: float):
+        """Compressibility signal from the dictionary-compression path
+        (repro.compress): the fraction of the last commit's unique
+        edges that became pattern references.  Stored as a hint that
+        scales the predicted effective buffer in `predict` — high hit
+        rates mean the next push costs less than its size suggests."""
+        del ratio  # reported for observability; the hit rate drives beta_e
+        self.dict_hit = float(np.clip(hit_rate, 0.0, 1.0))
 
     def observe_bucket(self, rho: float, density: float, beta_e: float):
         self.rho_hist.append(float(rho))
@@ -125,6 +142,9 @@ class PerfMon:
             rho = (1.0 - w) * rho + w * self.sketch_rho
         beta_e = float(P.predict_beta_e(self.beta_model, rho, density))
         beta_e = max(beta_e, float(edge_table_size))
+        if self.dict_hit is not None:
+            # referenced edges skip probing: shrink the effective load
+            beta_e *= 1.0 - self.COMPRESS_BETA_WEIGHT * self.dict_hit
         mu_prev = self.mu_hist[-1]
         mu_exp = float(P.predict_mu(self.mu_model, mu_prev, beta_e))
         s = float(P.cpu_slope(np.asarray(self.mu_hist, np.float32)))

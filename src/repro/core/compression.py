@@ -35,8 +35,24 @@ def sentinel_for(kd):
     return jnp.asarray(2**64 - 1 if kd == jnp.uint64 else 2**32 - 1, kd)
 
 
+# Bijective packing layout for uint64 keys: [1b tag=0][1b pack=1]
+# [27b src][27b dst][8b etype].  Ids that fit get an exact, collision-
+# free key; anything wider falls back to the splitmix hash with bit 63
+# set, so the packed and mixed domains can never alias each other.
+PACK_SRC_BITS = 27
+PACK_DST_BITS = 27
+PACK_ETYPE_BITS = 8
+
+
 def mix_keys(src: jax.Array, dst: jax.Array, etype: jax.Array) -> jax.Array:
-    """Combine (src, dst, etype) into one dedup key (splitmix-style)."""
+    """Combine (src, dst, etype) into one dedup key.
+
+    uint32: splitmix-style hash (collisions possible but rare).
+    uint64: exact bijective packing when src/dst < 2^27 and
+    0 <= etype < 2^8, hash fallback (bit 63 set) otherwise — distinct
+    triples that fit always get distinct keys.  Selection is per
+    element, so the same triple maps to the same key in every batch.
+    """
     kd = src.dtype
     c1 = jnp.asarray(0x9E3779B97F4A7C15 if kd == jnp.uint64 else 0x9E3779B9, kd)
     c2 = jnp.asarray(0xBF58476D1CE4E5B9 if kd == jnp.uint64 else 0x85EBCA6B, kd)
@@ -44,9 +60,18 @@ def mix_keys(src: jax.Array, dst: jax.Array, etype: jax.Array) -> jax.Array:
     x = (x ^ (x >> 30)) * c2
     x = x ^ (x >> 27)
     x = x + etype.astype(kd)
-    # keep the all-ones sentinel free
+    if kd == jnp.uint64:
+        et = etype.astype(kd)
+        fits = ((src < (1 << PACK_SRC_BITS)) & (dst < (1 << PACK_DST_BITS))
+                & (etype >= 0) & (et < (1 << PACK_ETYPE_BITS)))
+        packed = (jnp.asarray(1 << 62, kd)
+                  | (src << (PACK_DST_BITS + PACK_ETYPE_BITS))
+                  | (dst << PACK_ETYPE_BITS) | et)
+        x = jnp.where(fits, packed, x | jnp.asarray(1 << 63, kd))
+    # keep the all-ones sentinel and the 0 = empty-slot marker free
     sentinel = sentinel_for(kd)
-    return jnp.where(x == sentinel, jnp.asarray(1, kd), x)
+    x = jnp.where(x == sentinel, sentinel - jnp.asarray(1, kd), x)
+    return jnp.where(x == 0, jnp.asarray(2, kd), x)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -62,7 +87,11 @@ class CompressedBatch:
     n_input: jax.Array  # scalar int32 (valid inputs)
 
     def tree_flatten(self):
-        return dataclasses.astuple(self), None
+        # NOT dataclasses.astuple: astuple recurses into children and
+        # rebuilds containers (a PartitionSpec leaf would come back a
+        # plain tuple) — return the fields themselves.
+        return (self.keys, self.counts, self.index, self.valid,
+                self.n_unique, self.n_input), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

@@ -46,8 +46,11 @@ class EdgeTable:
     n_raw: jax.Array  # scalar int32 (pre-compression edge instructions)
 
     def tree_flatten(self):
-        fields = dataclasses.astuple(self)
-        return fields, None
+        # NOT dataclasses.astuple: it deep-copies every leaf and
+        # rebuilds tuple-subclass leaves (PartitionSpec) as plain
+        # tuples — return the fields themselves
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self)), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):

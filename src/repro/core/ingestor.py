@@ -17,7 +17,7 @@ from typing import Deque, List, Optional, Tuple
 import jax
 
 from repro.core.edge_table import EdgeTable
-from repro.graphstore.store import GraphStore, ingest_step
+from repro.graphstore.store import GraphStore, commit_compressed, ingest_step
 
 
 @dataclasses.dataclass
@@ -30,6 +30,7 @@ class CommitRecord:
     ok: bool
     probe_rounds: int = 0  # adaptive probe budget the commit ran with
     dropped: int = 0  # inserts lost to table pressure (probing exhausted)
+    refs: int = 0  # dictionary pattern references applied (repro.compress)
 
 
 class GraphIngestor:
@@ -74,7 +75,11 @@ class GraphIngestor:
         try:
             if self.fail_hook is not None and self.fail_hook():
                 raise ConnectionError("injected commit failure")
-            new_store, s = ingest_step(self.store, et)
+            if hasattr(et, "residual"):
+                # pattern-aware path: a repro.compress.CompressedCommit
+                new_store, s = commit_compressed(self.store, et)
+            else:
+                new_store, s = ingest_step(self.store, et)
             jax.block_until_ready(new_store.n_nodes)
             self.store = new_store
             busy = time.perf_counter() - t0
@@ -89,6 +94,7 @@ class GraphIngestor:
                 ok=True,
                 probe_rounds=int(s.get("probe_rounds", 0)),
                 dropped=int(s.get("dropped_inserts", 0)),
+                refs=int(s.get("dict_refs", 0)),
             )
             self.commits.append(rec)
             if self.commit_hook is not None:
@@ -96,7 +102,7 @@ class GraphIngestor:
             for hook in self.commit_hooks:
                 hook(et, s)
             rho = rec.new_nodes / max(rec.batch_nodes, 1)
-            return {
+            out = {
                 "committed": True,
                 "stats": s,
                 "busy_s": busy,
@@ -108,6 +114,11 @@ class GraphIngestor:
                 "pressure": max(float(s.get("node_load", 0.0)),
                                 float(s.get("edge_load", 0.0))),
             }
+            if "dict_refs" in s:
+                # compressibility signals (repro.compress -> controller)
+                out["refs"] = rec.refs
+                out["dict_hit_rate"] = float(s["dict_hit_rate"])
+            return out
         except ConnectionError:
             # commit failed (network/DBMS) -> archive for replay
             self.archive.append(et)

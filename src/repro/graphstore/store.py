@@ -88,7 +88,10 @@ class CommitDelta:
     dst_deg: jax.Array
 
     def tree_flatten(self):
-        return dataclasses.astuple(self), None
+        # shallow, like GraphStore: astuple() deep-copies and rebuilds
+        # tuple-subclass leaves (PartitionSpec) as plain tuples
+        return tuple(getattr(self, f.name)
+                     for f in dataclasses.fields(self)), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -206,6 +209,12 @@ def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
         "probe_rounds": jnp.maximum(n_probes_n, n_probes_e),
         "node_load": new_store.n_nodes.astype(jnp.float32) / jnp.float32(ncap),
         "edge_load": new_store.n_edges.astype(jnp.float32) / jnp.float32(ecap),
+        # per-entry store slots (-1 = dropped): the dictionary-
+        # compression stage caches these as reference bindings
+        # (repro.compress); popped before cross-shard reduction like
+        # the delta below
+        "nslot": jnp.where(node_placed, nslot, -1),
+        "eslot": jnp.where(edge_placed, eslot, -1),
         # incremental snapshot maintenance input
         "delta": CommitDelta(
             node_ids=et.node_ids,
@@ -221,6 +230,94 @@ def ingest_step(store: GraphStore, et) -> Tuple[GraphStore, dict]:
             dst_deg=dst_deg,
         ),
     }
+    return new_store, stats
+
+
+@jax.jit
+def commit_compressed(store: GraphStore, cc) -> Tuple[GraphStore, dict]:
+    """Pattern-aware GRAPHPUSH for a `repro.compress.CompressedCommit`.
+
+    The residual edge table takes the normal two-sweep `ingest_step`;
+    dictionary references then land by DIRECT scatter to their cached
+    store slots — zero probe rounds per reference.  Referenced edges
+    are by construction already present (their slots were cached at a
+    previous successful commit and slots are never freed), so the
+    result is bit-identical to committing the full raw batch: counts
+    accumulate on the same slots, no degrees change (refs are never
+    new edges), and each unique batch node still gets exactly one
+    `node_count` increment (reference-only endpoints are counted here,
+    deduplicated against the residual's node set).
+
+    Stats keep the raw-path keys with FULL-batch semantics (so rho,
+    instruction accounting and pressure signals stay comparable) plus
+    `dict_refs` / `dict_hit_rate`, and the `CommitDelta` carries the
+    reference edges as placed-not-new entries so incremental snapshots
+    (repro.query.snapshot.apply_delta) stay exact.
+    """
+    store1, s = ingest_step(store, cc.residual)
+    ncap = store1.node_keys.shape[0]
+    ecap = store1.edge_keys.shape[0]
+
+    # ---- reference edges: count accumulation on cached slots ----
+    rv = cc.ref_valid & (cc.ref_eslot >= 0)
+    edge_count = store1.edge_count.at[jnp.where(rv, cc.ref_eslot, ecap)].add(
+        cc.ref_count, mode="drop")
+    n_refs = jnp.sum(rv.astype(jnp.int32))
+
+    # ---- reference-only endpoints: one node_count +1 per unique
+    # batch node, exactly like the raw path ----
+    res_nodes = cc.residual.node_ids  # sorted unique, sentinel tail
+    nn = res_nodes.shape[0]
+
+    def in_residual(keys):
+        pos = jnp.clip(jnp.searchsorted(res_nodes, keys).astype(jnp.int32),
+                       0, nn - 1)
+        return res_nodes[pos] == keys
+
+    ref_keys = jnp.concatenate([cc.ref_src, cc.ref_dst])
+    ref_slots = jnp.concatenate([cc.ref_sslot, cc.ref_dslot])
+    cand = (jnp.concatenate([rv, rv]) & (ref_slots >= 0)
+            & ~in_residual(ref_keys))
+    m = ref_keys.shape[0]
+    lane = jnp.arange(m, dtype=jnp.int32)
+    # first occurrence per slot: endpoints shared by several refs (or
+    # by both sides of one) must still count once
+    first = jnp.full((ncap,), m, jnp.int32).at[
+        jnp.where(cand, ref_slots, ncap)].min(lane, mode="drop")
+    nmask = cand & (first[jnp.clip(ref_slots, 0, ncap - 1)] == lane)
+    node_count = store1.node_count.at[jnp.where(nmask, ref_slots, ncap)].add(
+        1, mode="drop")
+    n_ref_nodes = jnp.sum(nmask.astype(jnp.int32))
+
+    d = s["delta"]
+    zb = jnp.zeros_like(rv)
+    comb = CommitDelta(
+        node_ids=jnp.concatenate([d.node_ids, ref_keys]),
+        node_placed=jnp.concatenate([d.node_placed, nmask]),
+        node_new=jnp.concatenate([d.node_new, jnp.zeros_like(nmask)]),
+        src=jnp.concatenate([d.src, cc.ref_src]),
+        dst=jnp.concatenate([d.dst, cc.ref_dst]),
+        etype=jnp.concatenate([d.etype, cc.ref_etype]),
+        count=jnp.concatenate([d.count, cc.ref_count]),
+        edge_placed=jnp.concatenate([d.edge_placed, rv]),
+        edge_new=jnp.concatenate([d.edge_new, zb]),
+        src_deg=jnp.concatenate([d.src_deg, zb]),
+        dst_deg=jnp.concatenate([d.dst_deg, zb]),
+    )
+
+    batch_edges = s["batch_edges"] + n_refs
+    stats = dict(s)
+    stats.update(
+        batch_nodes=s["batch_nodes"] + n_ref_nodes,
+        batch_edges=batch_edges,
+        instructions=s["new_nodes"] + batch_edges,
+        dict_refs=n_refs,
+        dict_hit_rate=(n_refs.astype(jnp.float32)
+                       / jnp.maximum(batch_edges.astype(jnp.float32), 1.0)),
+        delta=comb,
+    )
+    new_store = dataclasses.replace(
+        store1, edge_count=edge_count, node_count=node_count)
     return new_store, stats
 
 
@@ -304,8 +401,11 @@ def make_distributed_ingest(mesh):
             n_edges=store.n_edges // jnp.int32(D),
         )
         new_store, stats = ingest_step(local_store, et)
-        # the CommitDelta stays shard-local (it indexes shard tables)
+        # the CommitDelta and slot arrays stay shard-local (they index
+        # shard tables)
         stats.pop("delta", None)
+        stats.pop("nslot", None)
+        stats.pop("eslot", None)
         stats = {
             k: (jax.lax.pmax(v, "data") if k in _STATS_MAX_KEYS
                 else jax.lax.psum(v, "data"))

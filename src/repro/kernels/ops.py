@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels import bloom as _bloom
 from repro.kernels import edge_dedup as _dedup
 from repro.kernels import flash_attention as _flash
+from repro.kernels import pattern_mine as _mine
 from repro.kernels import sampler as _sampler
 from repro.kernels import sketch as _sketch
 from repro.kernels import ssd_scan as _ssd
@@ -53,6 +54,19 @@ def bloom_diversity(keys: jax.Array, bitmap: jax.Array):
     hit = bloom_probe(keys, bitmap)
     rho = 1.0 - hit.mean(dtype=jnp.float32)
     return rho, bloom_build(keys, bitmap)
+
+
+def pattern_mine(src, dst, etype, count, valid, star_min, hot_min,
+                 use_kernel=None):
+    """Frequent-substructure mining over a dedup'd batch (GraphZip
+    front-end, repro.compress): (fan_out, fan_in, flags, psig) per
+    edge.  The jnp oracle is the fast path off-TPU."""
+    use_kernel = ON_TPU if use_kernel is None else use_kernel
+    if use_kernel:
+        return _mine.pattern_mine(src, dst, etype, count, valid,
+                                  star_min, hot_min, interpret=_INTERP)
+    return _mine.pattern_mine_ref(src, dst, etype, count, valid,
+                                  star_min, hot_min)
 
 
 def fused_upsert(table_keys, keys, valid, n_probes, use_kernel=None):

@@ -25,6 +25,9 @@ def main(argv=None):
     ap.add_argument("--cpu-max", type=float, default=0.55)
     ap.add_argument("--uncontrolled", action="store_true")
     ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--dict-compress", action="store_true",
+                    help="GraphZip dictionary compression (repro.compress)")
+    ap.add_argument("--dict-capacity", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rate", type=float, default=60.0)
     ap.add_argument("--burst", type=float, default=5.0)
@@ -44,6 +47,8 @@ def main(argv=None):
          .with_source(src)
          .uncontrolled(args.uncontrolled)
          .compressed(not args.no_compress))
+    if args.dict_compress:
+        b = b.with_compression(capacity=args.dict_capacity)
     if args.shards > 1:
         b = b.sharded(args.shards).spill_dir("/tmp/repro_spill_shards")
     pipe = b.build()
@@ -62,6 +67,8 @@ def main(argv=None):
               f"spills={rep.spill_events} drains={rep.drain_events}")
         print(f"store: {int(pipe.store.n_nodes)} nodes, "
               f"{int(pipe.store.n_edges)} edges")
+        if args.dict_compress:
+            print(f"dict: {b.dictionary_stage.stats()}")
         return rep
 
     mu = rep.samples["mu"]
@@ -77,6 +84,8 @@ def main(argv=None):
           f"spills={rep.spill_events} drains={rep.drain_events}")
     print(f"store: {int(pipe.store.n_nodes)} nodes, "
           f"{int(pipe.store.n_edges)} edges")
+    if args.dict_compress:
+        print(f"dict: {b.dictionary_stage.stats()}")
     return rep
 
 

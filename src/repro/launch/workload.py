@@ -40,6 +40,12 @@ def main(argv=None):
     ap.add_argument("--sketch-control", action="store_true",
                     help="sketch-guided control: feed live heavy-hitter "
                          "signals into the Algorithm-2 controller")
+    ap.add_argument("--dict-compress", action="store_true",
+                    help="GraphZip dictionary compression: rewrite "
+                         "recurring mined patterns into references and "
+                         "commit through the pattern-aware path")
+    ap.add_argument("--dict-capacity", type=int, default=4096,
+                    help="pattern-dictionary capacity (entries)")
     ap.add_argument("--node-cap", type=int, default=None)
     ap.add_argument("--edge-cap", type=int, default=None)
     ap.add_argument("--max-transitions", type=int, default=12,
@@ -69,6 +75,8 @@ def main(argv=None):
         speed=args.speed,
         rate_scale=args.rate_scale,
         sketch_guided=args.sketch_control,
+        dict_compress=args.dict_compress,
+        dict_capacity=args.dict_capacity,
         node_cap=args.node_cap,
         edge_cap=args.edge_cap,
     )

@@ -53,6 +53,11 @@ class WorkloadReport:
     delay_max_s: float
     store_nodes: int
     store_edges: int
+    # dictionary-compression path (repro.compress; zeros when off)
+    dict_compress: bool = False
+    pattern_refs: int = 0        # total (pattern_id, bindings) references
+    dict_hit_rate: float = 0.0   # dictionary hit rate over the whole run
+    commit_ms_mean: float = 0.0  # mean successful-commit latency (ms)
 
     @property
     def n_transitions(self) -> int:
@@ -79,6 +84,10 @@ class WorkloadReport:
             f"pressure_throttles={self.pressure_throttles} "
             f"dropped_inserts={self.dropped_inserts}\n"
             f"store: {self.store_nodes} nodes, {self.store_edges} edges"
+            + (f"\ndict: refs={self.pattern_refs} "
+               f"hit_rate={self.dict_hit_rate:.3f} "
+               f"commit_ms={self.commit_ms_mean:.2f}"
+               if self.dict_compress else "")
         )
 
 
@@ -104,6 +113,8 @@ def run_scenario(
     speed: float = 0.5,
     rate_scale: float = 1.0,
     sketch_guided: bool = False,
+    dict_compress: bool = False,
+    dict_capacity: int = 4096,
     node_cap: Optional[int] = None,
     edge_cap: Optional[int] = None,
     spill_dir: Optional[str] = None,
@@ -113,7 +124,9 @@ def run_scenario(
 
     `speed` scales the simulated consumer (0.5 = the paper's half-
     capacity store engine, the setting that makes bursts bite);
-    `node_cap`/`edge_cap` shrink the store for CI-sized runs.
+    `node_cap`/`edge_cap` shrink the store for CI-sized runs;
+    `dict_compress` turns on the GraphZip dictionary-compression path
+    (`PipelineBuilder.with_compression`).
     """
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     ticks = int(ticks if ticks is not None else scn.ticks)
@@ -132,10 +145,15 @@ def run_scenario(
         )
     src = ScenarioSource(scn, seed=seed, rate_scale=rate_scale)
     dropped = [0]
+    refs = [0]
+    hits = [0.0, 0]  # hit-rate sum, commit count
 
     def _count_drops(ev):
         if ev.kind == "commit":
             dropped[0] += int(ev.payload.get("dropped", 0))
+            refs[0] += int(ev.payload.get("refs", 0))
+            hits[0] += float(ev.payload.get("dict_hit_rate", 0.0))
+            hits[1] += 1
 
     b = (PipelineBuilder(cfg)
          .with_source(src)
@@ -144,6 +162,8 @@ def run_scenario(
          .on_event(_count_drops))
     if sketch_guided:
         b = b.sketch_guided()
+    if dict_compress:
+        b = b.with_compression(capacity=dict_capacity)
     if shards > 1:
         b = b.sharded(shards)
     if on_event is not None:
@@ -174,6 +194,9 @@ def run_scenario(
     for a in actions:
         counts[a] = counts.get(a, 0) + 1
     store = pipe.store
+    ingestor = getattr(pipe.sink, "ingestor", None)
+    commit_ms = [1e3 * c.busy_s for c in ingestor.commits if c.ok] \
+        if ingestor is not None else []
     return WorkloadReport(
         scenario=scn.name,
         seed=seed,
@@ -200,4 +223,8 @@ def run_scenario(
         delay_max_s=float(delay.max()),
         store_nodes=int(store.n_nodes),
         store_edges=int(store.n_edges),
+        dict_compress=dict_compress,
+        pattern_refs=refs[0],
+        dict_hit_rate=hits[0] / max(hits[1], 1),
+        commit_ms_mean=float(np.mean(commit_ms)) if commit_ms else 0.0,
     )
