@@ -1,0 +1,69 @@
+"""Telemetry-overhead benchmark: spans on vs. off on steady_state.
+
+The PR-7 acceptance bar is that full span telemetry (tick/filter/
+decide/transform/commit sub-spans + the controller audit trail) costs
+<3% wall time on the steady_state scenario, and that the disabled
+path is free.  This bench runs the same CI-sized steady_state
+workload three ways — telemetry off (the default), telemetry on, and
+telemetry on again (min-of-two to damp host noise) — and reports the
+overhead plus the per-stage commit breakdown that lands in
+BENCH_ingest.json's trajectory.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+from repro.telemetry import TelemetryRegistry
+from repro.workloads import run_scenario
+
+TICKS = 60
+NODE_CAP = 1 << 12
+EDGE_CAP = 1 << 14
+ACCEPTANCE_PCT = 3.0
+
+
+def _run(telemetry=None) -> Tuple[float, object]:
+    t0 = time.perf_counter()
+    rep = run_scenario(
+        "steady_state", ticks=TICKS, seed=3, speed=0.5,
+        node_cap=NODE_CAP, edge_cap=EDGE_CAP,
+        spill_dir="/tmp/repro_bench_telemetry",
+        telemetry=telemetry)
+    return time.perf_counter() - t0, rep
+
+
+def bench_telemetry_overhead() -> Tuple[List[Dict], Dict]:
+    _run()  # warm: JIT compilation must not land in either side
+    off_s = min(_run()[0], _run()[0])
+
+    reg = TelemetryRegistry()
+    on_a, rep = _run(telemetry=reg)
+    on_b, _ = _run(telemetry=TelemetryRegistry())
+    on_s = min(on_a, on_b)
+
+    overhead_pct = 100.0 * (on_s - off_s) / max(off_s, 1e-9)
+    commit_stages = {
+        name: {k: round(float(v), 4) for k, v in st.items()}
+        for name, st in rep.stage_latency_ms.items()
+        if name.startswith(("commit.", "transform."))
+    }
+    rows = [{
+        "scenario": "steady_state",
+        "ticks": TICKS,
+        "telemetry_off_s": round(off_s, 4),
+        "telemetry_on_s": round(on_s, 4),
+        "overhead_pct": round(overhead_pct, 2),
+        "spans_recorded": len(reg.events),
+        "stages": len(rep.stage_latency_ms),
+        "audit_decisions": rep.audit_decisions,
+        "records": rep.total_records,
+    }]
+    derived = {
+        "overhead_pct": round(overhead_pct, 2),
+        "within_acceptance": overhead_pct < ACCEPTANCE_PCT,
+        "acceptance_pct": ACCEPTANCE_PCT,
+        "spans_recorded": len(reg.events),
+        "commit_breakdown_ms": commit_stages,
+    }
+    return rows, derived

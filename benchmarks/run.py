@@ -24,7 +24,8 @@ import time
 
 # bench names whose results belong in the BENCH_ingest.json trajectory
 TRAJECTORY_BENCHES = ("ingest_trajectory", "store_ingest", "snapshot_build",
-                      "workload_scenarios", "compress_dictionary")
+                      "workload_scenarios", "compress_dictionary",
+                      "telemetry_overhead")
 
 BENCHES = [
     # (name, module, function, paper ref)
@@ -40,6 +41,7 @@ BENCHES = [
     ("ssd_chunked_speedup", "benchmarks.bench_kernels", "bench_ssd_vs_naive", "LM substrate"),
     ("workload_scenarios", "benchmarks.bench_workloads", "bench_scenarios", "scenario family (Alg 2 under adversarial streams)"),
     ("compress_dictionary", "benchmarks.bench_compress", "bench_compress_dictionary", "GraphZip dictionary compression (Fig 13 + refs)"),
+    ("telemetry_overhead", "benchmarks.bench_telemetry", "bench_telemetry_overhead", "observability cost (spans on vs off, steady_state)"),
     ("sketch_update", "benchmarks.bench_query", "bench_sketch_update", "GSS/TCM sketch (Gou 2018)"),
     ("snapshot_build", "benchmarks.bench_query", "bench_snapshot_build", "store->CSR compaction"),
     ("query_latency", "benchmarks.bench_query", "bench_query_latency", "streaming graph queries (Pacaci 2021)"),

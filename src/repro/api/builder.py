@@ -56,6 +56,7 @@ class PipelineBuilder:
         self._sketch_guided = False
         self._dict_stage = None
         self._compression_kw = None
+        self._telemetry = None
 
     # ---- parts ----
     def with_source(self, source) -> "PipelineBuilder":
@@ -183,6 +184,22 @@ class PipelineBuilder:
         self._metrics = hub
         return self
 
+    def with_telemetry(self, registry=None) -> "PipelineBuilder":
+        """Span telemetry + controller audit trail (repro.telemetry):
+        threads one `TelemetryRegistry` through every layer — the
+        MetricsHub (event counters + loop spans), the transform
+        (map/dedup), the sink's ingestor (commit.upsert/wait/hooks),
+        the sketch/dictionary stages, the snapshot maintainer, and an
+        `AuditTrail` per controller (per-shard).  Pass a registry to
+        share one across pipelines, or nothing to create one; read it
+        back via `pipe.telemetry` / `pipe.metrics.telemetry`."""
+        from repro.telemetry import TelemetryRegistry
+
+        if registry is None or registry is True:
+            registry = TelemetryRegistry()
+        self._telemetry = registry
+        return self
+
     def on_event(self, hook: Callable[[PipelineEvent], None]) -> "PipelineBuilder":
         self._hooks.append(hook)
         return self
@@ -226,7 +243,9 @@ class PipelineBuilder:
             consumer = MeasuredConsumer(sink.ingestor)
         elif consumer is None:
             consumer = SimulatedConsumer()
-        metrics = self._metrics or MetricsHub()
+        metrics = self._metrics or MetricsHub(telemetry=self._telemetry)
+        if self._metrics is not None and self._telemetry is not None:
+            metrics.telemetry = self._telemetry
         for h in self._hooks:
             metrics.subscribe(h)
         qs_opts = self._query_sink_opts
@@ -298,7 +317,33 @@ class PipelineBuilder:
                         c.observe_sketch(ev.payload)
 
             metrics.subscribe(_guide)
+        if self._telemetry is not None:
+            self._wire_telemetry(pipe, transform, sink, controllers)
         return pipe
+
+    def _wire_telemetry(self, pipe, transform, sink, controllers):
+        """Thread the registry through every instrumented layer."""
+        from repro.telemetry import AuditTrail
+
+        reg = self._telemetry
+        if hasattr(transform, "telemetry"):
+            transform.telemetry = reg  # CompressingTransform forwards
+        for st in pipe.stages:  # SketchStage / DictionaryStage / customs
+            if hasattr(st, "telemetry"):
+                st.telemetry = reg
+        # the sink chain: QuerySink wrapper, its maintainer, and the
+        # GraphStoreSink's ingestor underneath (commit sub-spans)
+        if hasattr(sink, "telemetry"):
+            sink.telemetry = reg
+        maintainer = getattr(sink, "maintainer", None)
+        if maintainer is not None:
+            maintainer.telemetry = reg
+        ingestor = getattr(sink, "ingestor", None)
+        if ingestor is not None and hasattr(ingestor, "telemetry"):
+            ingestor.telemetry = reg
+        # one audit trail per controller, tagged with its shard
+        for si, c in enumerate(controllers):
+            c.audit = AuditTrail(reg, shard=si)
 
     def run(self, max_ticks: int = 300):
         """Build and run in one call (source must be set)."""

@@ -15,6 +15,7 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core.buffer import PerfSample
+from repro.telemetry.spans import TelemetryRegistry
 
 
 @dataclasses.dataclass
@@ -46,12 +47,32 @@ class PipelineReport:
 
 
 class MetricsHub:
-    """Event bus + trace accumulator for one pipeline run."""
+    """Event bus + trace accumulator for one pipeline run.
 
-    def __init__(self):
+    Event counts live in a `repro.telemetry.TelemetryRegistry` (the
+    hub's `counters` is the registry's always-on Counter, so the
+    pre-telemetry surface — ``hub.counters["spill"]`` — is unchanged).
+    Pass a shared registry (or let `PipelineBuilder.with_telemetry`
+    do it) and every span the pipeline records lands next to these
+    counts; by default the hub owns a disabled registry, so span
+    calls threaded through it cost one branch and allocate nothing.
+
+    Hook semantics (pinned by tests/test_telemetry.py): counters
+    increment on every `emit` whether or not hooks are attached; a
+    `PipelineEvent` is only constructed when at least one hook is
+    subscribed, and subscribers attached mid-run observe every
+    subsequent event (never a replay of earlier ones).
+    """
+
+    def __init__(self, telemetry: Optional[TelemetryRegistry] = None):
         self.trace: List[PerfSample] = []
-        self.counters: collections.Counter = collections.Counter()
+        self.telemetry = telemetry if telemetry is not None \
+            else TelemetryRegistry(enabled=False)
         self._hooks: List[Callable[[PipelineEvent], None]] = []
+
+    @property
+    def counters(self) -> collections.Counter:
+        return self.telemetry.counters
 
     def subscribe(self, hook: Callable[[PipelineEvent], None]) -> "MetricsHub":
         self._hooks.append(hook)

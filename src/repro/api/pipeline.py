@@ -38,18 +38,23 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
     mu-model updates, and the records/instr/raw/crs totals.
     """
     cdt = dt if consume_dt is None else consume_dt
+    tel = hub.telemetry
     pm = buf.perfmon
-    dec = buf.decide(len(buf) * 4.0, 0.0)
+    aud = buf.controller.audit
+    with tel.span("decide"):
+        dec = buf.decide(len(buf) * 4.0, 0.0, now=now)
 
     if dec.action in ("push", "drain+push") and len(buf) >= 1:
         if dec.action == "drain+push" and buf.spill_depth:
-            buf.drain_spill()
+            with tel.span("spill.drain"):
+                buf.drain_spill()
             hub.emit("drain", now, depth=buf.spill_depth)
         batch = buf.take_batch()
         if batch:
             et, n_instr, raw_i = transform.encode(batch)
             out = sink.commit(et, now=now)
-            mu = consumer.consume(n_instr, cdt, now=now)
+            with tel.span("consume"):
+                mu = consumer.consume(n_instr, cdt, now=now)
             committed = out.get("committed", False)
             rho = out.get("rho", 1.0) if committed else 1.0
             cr = float(et.compression_ratio())
@@ -69,6 +74,9 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
                     # input (dictionary compression, repro.compress)
                     pm.observe_compression(out["dict_hit_rate"], cr)
             pm.observe_mu(mu)
+            if aud is not None:
+                # predicted-vs-realized for the audit trail
+                aud.resolve(mu, float(et.size()))
             pm.observe_bucket(rho, float(et.density()), float(et.size()))
             pm.observe_mu_outcome(state["last_mu"], state["last_beta_e"], mu)
             state["last_beta_e"], state["last_mu"] = float(et.size()), mu
@@ -83,10 +91,13 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
     elif dec.action == "throttle":
         # spill the whole buffer to disk (data throttling)
         if len(buf):
-            buf.spill_all()
+            with tel.span("spill.flush"):
+                buf.spill_all()
             hub.emit("spill", now, depth=buf.spill_depth)
         mu = consumer.consume(0, cdt, now=now)
         pm.observe_mu(mu)
+        if aud is not None:
+            aud.resolve(mu, 0.0)
         hub.emit("throttle", now)
         hub.record(PerfSample(now, mu, 0.0, 0.0, 0,
                               dec.beta_e, *pm.velocity(),
@@ -95,6 +106,8 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
     else:  # hold
         mu = consumer.consume(0, cdt, now=now)
         pm.observe_mu(mu)
+        if aud is not None:
+            aud.resolve(mu, 0.0)
         hub.emit("hold", now, buffered=len(buf))
         hub.record(PerfSample(now, mu, 0.0, 0.0, len(buf),
                               dec.beta_e, *pm.velocity(),
@@ -134,6 +147,7 @@ class StreamPipeline:
             node_cap=self.cfg.store_nodes, edge_cap=self.cfg.store_edges)
         self.uncontrolled = uncontrolled
         self.metrics = metrics or MetricsHub()
+        self.telemetry = self.metrics.telemetry
 
     # ---- convenience accessors ----
     @property
@@ -185,41 +199,46 @@ class StreamPipeline:
         state = {"last_beta_e": self.cfg.beta_init, "last_mu": 0.0,
                  "instr": 0, "raw": 0, "crs": []}
 
+        tel = self.telemetry
         for i, tick in enumerate(source_ticks):
             if i >= max_ticks:
                 break
             now, dt = tick.t, 1.0
             ctx = TickContext(t=now, dt=dt, index=i)
-            # ---- 1. filter (+ any extra record stages) ----
-            recs = self.filter_stage(tick.records, ctx)
-            for stage in self.stages:
-                recs = stage(recs, ctx)
-            total_records += len(recs)
-            pm.observe_rate(now, len(recs))
-            hub.emit("tick", now, raw=len(tick.records), kept=len(recs))
-            # ---- 2. buffer ----
-            buf.extend(recs)
+            with tel.span("tick"):
+                # ---- 1. filter (+ any extra record stages) ----
+                with tel.span("filter"):
+                    recs = self.filter_stage(tick.records, ctx)
+                for stage in self.stages:
+                    recs = stage(recs, ctx)
+                total_records += len(recs)
+                pm.observe_rate(now, len(recs))
+                hub.emit("tick", now, raw=len(tick.records), kept=len(recs))
+                # ---- 2. buffer ----
+                buf.extend(recs)
 
-            if self.uncontrolled:
-                # paper Figs. 1-3/7: push every tick, no control
-                if len(buf):
-                    batch = buf.take_all()
-                    et, mu, rho, cr, ni, ri = self._transform_and_commit(batch, now, dt)
-                    pm.observe_mu(mu)
-                    state["instr"] += ni
-                    state["raw"] += ri
-                    state["crs"].append(cr)
-                    hub.emit("push", now, records=len(batch))
-                    hub.record(PerfSample(now, mu, rho, float(et.density()),
-                                          len(buf), float(et.size()),
-                                          *pm.velocity(), "push",
-                                          buf.spill_depth, cr,
-                                          self.consumer.delay_s))
-                continue
+                if self.uncontrolled:
+                    # paper Figs. 1-3/7: push every tick, no control
+                    if len(buf):
+                        batch = buf.take_all()
+                        et, mu, rho, cr, ni, ri = self._transform_and_commit(
+                            batch, now, dt)
+                        pm.observe_mu(mu)
+                        state["instr"] += ni
+                        state["raw"] += ri
+                        state["crs"].append(cr)
+                        hub.emit("push", now, records=len(batch))
+                        hub.record(PerfSample(now, mu, rho,
+                                              float(et.density()),
+                                              len(buf), float(et.size()),
+                                              *pm.velocity(), "push",
+                                              buf.spill_depth, cr,
+                                              self.consumer.delay_s))
+                    continue
 
-            # ---- 3-7. controlled path ----
-            controlled_tick(buf, self.transform, self.sink, self.consumer,
-                            hub, state, now, dt)
+                # ---- 3-7. controlled path ----
+                controlled_tick(buf, self.transform, self.sink,
+                                self.consumer, hub, state, now, dt)
 
         return hub.build_report(total_records, state["instr"], state["raw"],
                                 state["crs"], time.time() - t_start)

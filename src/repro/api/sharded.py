@@ -81,19 +81,25 @@ class ShardedPipeline:
             node_cap=self.cfg.store_nodes, edge_cap=self.cfg.store_edges)
         self.shard_key = shard_key or default_shard_key
         self.metrics = metrics or MetricsHub()
+        self.telemetry = self.metrics.telemetry
         self.shards = [
             BufferControlStage(cfg=self.cfg, spill_dir=f"{spill_dir}/shard{i}")
             for i in range(n_shards)
         ]
-        self._hubs = [MetricsHub() for _ in range(n_shards)]
+        # per-shard hubs: own counters (ShardedReport sums them), but
+        # spans land in the aggregate registry tagged with the shard
+        self._hubs = [MetricsHub(telemetry=self.telemetry.child(i))
+                      for i in range(n_shards)]
         # forward every shard event to the caller's hub, tagged with the
         # shard index, so on_event() subscribers see the whole fleet
         for si, hub in enumerate(self._hubs):
             hub.subscribe(lambda ev, si=si: self._forward(ev, si))
 
     def _forward(self, ev: PipelineEvent, shard: int):
-        for hook in self.metrics._hooks:
-            hook(PipelineEvent(ev.kind, ev.t, {**ev.payload, "shard": shard}))
+        # route through emit (not the hooks directly) so the aggregate
+        # hub's counters see shard-level spill/drain/commit events too;
+        # subscribers keep receiving the shard-tagged payload
+        self.metrics.emit(ev.kind, ev.t, **{**ev.payload, "shard": shard})
 
     @property
     def store(self):
@@ -117,9 +123,10 @@ class ShardedPipeline:
         buf.perfmon.observe_rate(now, len(part))
         state["records"] += len(part)
         buf.extend(part)
-        controlled_tick(buf, self.transform, self.sink, self.consumer,
-                        self._hubs[si], state, now, dt,
-                        consume_dt=dt / self.n_shards)
+        with self.telemetry.span("shard.tick", shard=si):
+            controlled_tick(buf, self.transform, self.sink, self.consumer,
+                            self._hubs[si], state, now, dt,
+                            consume_dt=dt / self.n_shards)
 
     # ------------------------------------------------------------------
     def run(self, source_ticks: Optional[Iterable] = None,
@@ -135,18 +142,24 @@ class ShardedPipeline:
              "records": 0, "instr": 0, "raw": 0, "crs": []}
             for _ in range(self.n_shards)
         ]
+        tel = self.telemetry
         for i, tick in enumerate(source_ticks):
             if i >= max_ticks:
                 break
             now, dt = tick.t, 1.0
             ctx = TickContext(t=now, dt=dt, index=i)
-            recs = self.filter_stage(tick.records, ctx)
-            for stage in self.stages:
-                recs = stage(recs, ctx)
-            total_records += len(recs)
-            self.metrics.emit("tick", now, raw=len(tick.records), kept=len(recs))
-            for si, part in enumerate(self._partition(recs)):
-                self._shard_step(si, part, now, dt, states[si])
+            with tel.span("tick"):
+                with tel.span("filter"):
+                    recs = self.filter_stage(tick.records, ctx)
+                for stage in self.stages:
+                    recs = stage(recs, ctx)
+                total_records += len(recs)
+                self.metrics.emit("tick", now, raw=len(tick.records),
+                                  kept=len(recs))
+                with tel.span("partition"):
+                    parts = self._partition(recs)
+                for si, part in enumerate(parts):
+                    self._shard_step(si, part, now, dt, states[si])
 
         wall = time.time() - t_start
         reports = [

@@ -47,16 +47,23 @@ class TransformStage:
     name = "transform"
 
     def __init__(self, mapping: Optional[MappingSpec] = None,
-                 max_edges_per_batch: int = 8_192, compress: bool = True):
+                 max_edges_per_batch: int = 8_192, compress: bool = True,
+                 telemetry=None):
+        from repro.telemetry.spans import NULL_REGISTRY
+
         self.mapping = mapping or tweet_mapping()
         self.max_edges_per_batch = max_edges_per_batch
         self.compress = compress
+        self.telemetry = telemetry or NULL_REGISTRY
 
     def encode(self, records: List[dict]) -> Tuple[EdgeTable, int, int]:
-        raw = create_edges(records, self.mapping)
+        tel = self.telemetry
+        with tel.span("transform.map"):
+            raw = create_edges(records, self.mapping)
         cap = max(64, 1 << int(np.ceil(np.log2(max(raw.n_edges, 1)))))
         cap = min(cap, self.max_edges_per_batch)
-        et = from_raw_batch(raw, cap)
+        with tel.span("transform.dedup"):
+            et = from_raw_batch(raw, cap)
         raw_instr = 3 * raw.n_edges
         if not self.compress:
             # uncompressed baseline: ingestion load = raw instructions
@@ -109,8 +116,9 @@ class BufferControlStage:
         self.max_buffered = max(self.max_buffered, len(self.buffer))
 
     # ---- controller passthrough ----
-    def decide(self, size_est: float, density: float) -> ControllerDecision:
-        return self.controller.decide(size_est, density)
+    def decide(self, size_est: float, density: float,
+               now: Optional[float] = None) -> ControllerDecision:
+        return self.controller.decide(size_est, density, now=now)
 
     @property
     def perfmon(self):

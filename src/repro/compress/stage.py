@@ -214,6 +214,8 @@ class DictionaryStage:
     def __init__(self, capacity: int = 4096, star_min: int = 4,
                  hot_min: int = 2, ttl: int = 64,
                  use_kernel: Optional[bool] = None):
+        from repro.telemetry.spans import NULL_REGISTRY
+
         self.capacity = int(capacity)
         self.star_min = int(star_min)
         self.hot_min = int(hot_min)
@@ -223,6 +225,7 @@ class DictionaryStage:
         self.ticks_seen = 0
         self.rewrites = 0
         self.refs_total = 0
+        self.telemetry = NULL_REGISTRY
 
     # ---- Stage protocol ----
     def __call__(self, records: List[dict], ctx=None) -> List[dict]:
@@ -239,14 +242,17 @@ class DictionaryStage:
         from repro.kernels import ops
 
         kd = et.src.dtype
+        tel = self.telemetry
         self._ensure(kd)
-        fan_out, fan_in, flags, psig = ops.pattern_mine(
-            et.src, et.dst, et.etype, et.count, et.edge_valid,
-            self.star_min, self.hot_min, use_kernel=self.use_kernel)
-        keys = mix_keys(et.src, et.dst, et.etype)
-        self.dct, hit, eslot, sslot, dslot, entry = dict_lookup(
-            self.dct, keys, et.edge_valid)
-        n_ref = int(jnp.sum(hit.astype(jnp.int32)))
+        with tel.span("rewrite.mine"):
+            fan_out, fan_in, flags, psig = ops.pattern_mine(
+                et.src, et.dst, et.etype, et.count, et.edge_valid,
+                self.star_min, self.hot_min, use_kernel=self.use_kernel)
+        with tel.span("rewrite.lookup"):
+            keys = mix_keys(et.src, et.dst, et.etype)
+            self.dct, hit, eslot, sslot, dslot, entry = dict_lookup(
+                self.dct, keys, et.edge_valid)
+            n_ref = int(jnp.sum(hit.astype(jnp.int32)))
         admit = (flags != 0) & et.edge_valid & ~hit
         self.rewrites += 1
         self.refs_total += n_ref
@@ -261,8 +267,9 @@ class DictionaryStage:
         n_valid = int(jnp.sum(et.edge_valid.astype(jnp.int32)))
         rcap = min(_pow2(max(n_valid - n_ref, 1), 64), cap)
         refcap = min(_pow2(n_ref, REF_MIN_CAP), cap)
-        return _split(et, hit, admit, psig, eslot, sslot, dslot, entry,
-                      rcap, refcap)
+        with tel.span("rewrite.split"):
+            return _split(et, hit, admit, psig, eslot, sslot, dslot, entry,
+                          rcap, refcap)
 
     # ---- commit feedback (ingestor.commit_hooks) ----
     def observe_commit(self, committed, stats) -> None:
@@ -278,12 +285,13 @@ class DictionaryStage:
         nslot = stats.get("nslot")
         if eslot is None or nslot is None:
             return
-        sslot = nslot[res.src_node_idx]
-        dslot = nslot[res.dst_node_idx]
-        admit = admit_mask & (eslot >= 0) & (sslot >= 0) & (dslot >= 0)
-        keys = mix_keys(res.src, res.dst, res.etype)
-        self.dct = dict_admit(self.dct, keys, admit, eslot, sslot, dslot,
-                              committed.res_psig, ttl=self.ttl)
+        with self.telemetry.span("dict.admit"):
+            sslot = nslot[res.src_node_idx]
+            dslot = nslot[res.dst_node_idx]
+            admit = admit_mask & (eslot >= 0) & (sslot >= 0) & (dslot >= 0)
+            keys = mix_keys(res.src, res.dst, res.etype)
+            self.dct = dict_admit(self.dct, keys, admit, eslot, sslot, dslot,
+                                  committed.res_psig, ttl=self.ttl)
 
     # ---- observability ----
     def stats(self) -> dict:
@@ -311,6 +319,17 @@ class CompressingTransform:
         self.inner = inner
         self.stage = stage
         self.name = f"{inner.name}+dict"
+
+    # one registry drives both halves (builder sets .telemetry once)
+    @property
+    def telemetry(self):
+        return self.stage.telemetry
+
+    @telemetry.setter
+    def telemetry(self, reg):
+        self.stage.telemetry = reg
+        if hasattr(self.inner, "telemetry"):
+            self.inner.telemetry = reg
 
     def encode(self, records: List[dict]) -> Tuple[CompressedCommit, int, int]:
         et, _, raw_instr = self.inner.encode(records)

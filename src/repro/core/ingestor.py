@@ -18,6 +18,7 @@ import jax
 
 from repro.core.edge_table import EdgeTable
 from repro.graphstore.store import GraphStore, commit_compressed, ingest_step
+from repro.telemetry.spans import NULL_REGISTRY
 
 
 @dataclasses.dataclass
@@ -53,6 +54,11 @@ class GraphIngestor:
         self.commit_hooks: List = []
         self.occupancy_window = occupancy_window
         self._busy: Deque[Tuple[float, float]] = collections.deque(maxlen=512)
+        # span telemetry (repro.telemetry): commit milliseconds split
+        # into upsert-dispatch / device-wait / observer-hook sub-spans.
+        # NULL_REGISTRY = disabled; PipelineBuilder.with_telemetry swaps
+        # in the live registry.
+        self.telemetry = NULL_REGISTRY
 
     # ------------------------------------------------------------------
     def push(self, et: EdgeTable, now: Optional[float] = None) -> dict:
@@ -71,18 +77,23 @@ class GraphIngestor:
         return stats
 
     def _commit(self, et: EdgeTable, now: Optional[float]) -> dict:
+        tel = self.telemetry
         t0 = time.perf_counter()
         try:
             if self.fail_hook is not None and self.fail_hook():
                 raise ConnectionError("injected commit failure")
-            if hasattr(et, "residual"):
-                # pattern-aware path: a repro.compress.CompressedCommit
-                new_store, s = commit_compressed(self.store, et)
-            else:
-                new_store, s = ingest_step(self.store, et)
-            jax.block_until_ready(new_store.n_nodes)
+            compressed = hasattr(et, "residual")
+            with tel.span("commit.upsert"):
+                if compressed:
+                    # pattern-aware path: repro.compress.CompressedCommit
+                    new_store, s = commit_compressed(self.store, et)
+                else:
+                    new_store, s = ingest_step(self.store, et)
+            with tel.span("commit.wait"):
+                jax.block_until_ready(new_store.n_nodes)
             self.store = new_store
             busy = time.perf_counter() - t0
+            tel.observe("commit.total", busy)
             wall = now if now is not None else time.time()
             self._busy.append((wall, busy))
             rec = CommitRecord(
@@ -97,10 +108,11 @@ class GraphIngestor:
                 refs=int(s.get("dict_refs", 0)),
             )
             self.commits.append(rec)
-            if self.commit_hook is not None:
-                self.commit_hook(et, s)
-            for hook in self.commit_hooks:
-                hook(et, s)
+            with tel.span("commit.hooks"):
+                if self.commit_hook is not None:
+                    self.commit_hook(et, s)
+                for hook in self.commit_hooks:
+                    hook(et, s)
             rho = rec.new_nodes / max(rec.batch_nodes, 1)
             out = {
                 "committed": True,

@@ -50,6 +50,11 @@ def main(argv=None):
     ap.add_argument("--edge-cap", type=int, default=None)
     ap.add_argument("--max-transitions", type=int, default=12,
                     help="timeline rows to print")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace of the "
+                         "run here (enables span telemetry + the "
+                         "controller audit trail; see launch.telemetry "
+                         "for the full summary view)")
     ap.add_argument("--json", default=None, help="write the report dict here")
     ap.add_argument("--dryrun", action="store_true",
                     help="tiny end-to-end run (CI smoke)")
@@ -79,6 +84,7 @@ def main(argv=None):
         dict_capacity=args.dict_capacity,
         node_cap=args.node_cap,
         edge_cap=args.edge_cap,
+        trace=args.trace_out,
     )
 
     print(rep.summary())
@@ -97,6 +103,10 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(rep.to_dict(), f, indent=2)
         print(f"(wrote report to {args.json})")
+
+    if args.trace_out:
+        print(f"(wrote Chrome trace to {args.trace_out} — load in "
+              f"ui.perfetto.dev or chrome://tracing)")
 
     if args.dryrun:
         ok = rep.total_records > 0 and bool(json.dumps(rep.to_dict()))

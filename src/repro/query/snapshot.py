@@ -381,12 +381,15 @@ class SnapshotMaintainer:
     saturation).  `full_builds` / `delta_applies` count both paths."""
 
     def __init__(self, max_pending: int = 32):
+        from repro.telemetry.spans import NULL_REGISTRY
+
         self.max_pending = max_pending
         self._snap: Optional[GraphSnapshot] = None
         self._pending: List[CommitDelta] = []
         self._force_rebuild = True
         self.full_builds = 0
         self.delta_applies = 0
+        self.telemetry = NULL_REGISTRY
 
     def absorb(self, et, stats) -> None:
         delta = None if stats is None else stats.get("delta")
@@ -396,18 +399,22 @@ class SnapshotMaintainer:
             self._pending.append(delta)
 
     def snapshot(self, store: GraphStore) -> GraphSnapshot:
+        tel = self.telemetry
         pending, self._pending = self._pending, []
         snap = self._snap
         if (snap is None or self._force_rebuild
                 or len(pending) > self.max_pending):
-            snap = build_snapshot(store)
+            with tel.span("snapshot.rebuild"):
+                snap = build_snapshot(store)
             self.full_builds += 1
         else:
             for d in pending:
-                snap, unplaced = apply_delta(snap, d)
+                with tel.span("snapshot.apply_delta"):
+                    snap, unplaced = apply_delta(snap, d)
                 self.delta_applies += 1
                 if int(unplaced):
-                    snap = build_snapshot(store)
+                    with tel.span("snapshot.rebuild"):
+                        snap = build_snapshot(store)
                     self.full_builds += 1
                     break
         self._snap = snap

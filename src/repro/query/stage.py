@@ -85,25 +85,29 @@ class SketchStage(_SketchQueries):
                  use_kernel: Optional[bool] = None):
         from repro.kernels import ops
 
+        from repro.telemetry.spans import NULL_REGISTRY
+
         self.sketch = sketch if sketch is not None else init_sketch(
             depth=depth, width=width, hh_slots=hh_slots)
         self.mapping = mapping or tweet_mapping()
         self.max_edges_per_batch = max_edges_per_batch
         self.use_kernel = ops.ON_TPU if use_kernel is None else use_kernel
         self.ticks_seen = 0
+        self.telemetry = NULL_REGISTRY
 
     def __call__(self, records: List[dict], ctx=None) -> List[dict]:
         if records:
-            raw = create_edges(records, self.mapping)
-            # absorb in <=cap chunks: a burst tick larger than the
-            # device batch must never silently truncate, or the
-            # sketch-upper-bounds-the-store guarantee breaks
-            for lo in range(0, raw.n_edges, self.max_edges_per_batch):
-                hi = min(lo + self.max_edges_per_batch, raw.n_edges)
-                cap = max(64, 1 << int(np.ceil(np.log2(hi - lo))))
-                et = from_raw_batch(_slice_raw(raw, lo, hi), cap)
-                self.sketch = sketch_update(self.sketch, et,
-                                            use_kernel=self.use_kernel)
+            with self.telemetry.span("sketch.update"):
+                raw = create_edges(records, self.mapping)
+                # absorb in <=cap chunks: a burst tick larger than the
+                # device batch must never silently truncate, or the
+                # sketch-upper-bounds-the-store guarantee breaks
+                for lo in range(0, raw.n_edges, self.max_edges_per_batch):
+                    hi = min(lo + self.max_edges_per_batch, raw.n_edges)
+                    cap = max(64, 1 << int(np.ceil(np.log2(hi - lo))))
+                    et = from_raw_batch(_slice_raw(raw, lo, hi), cap)
+                    self.sketch = sketch_update(self.sketch, et,
+                                                use_kernel=self.use_kernel)
         self.ticks_seen += 1
         return records
 
@@ -137,7 +141,9 @@ class QuerySink(_SketchQueries):
                  incremental: bool = True, exact_topk: int = 0):
         from repro.kernels import ops
         from repro.query.snapshot import SnapshotMaintainer
+        from repro.telemetry.spans import NULL_REGISTRY
 
+        self.telemetry = NULL_REGISTRY
         self.inner = inner
         self.sketch = sketch if sketch is not None else init_sketch(
             depth=depth, width=width, hh_slots=hh_slots)
@@ -172,8 +178,9 @@ class QuerySink(_SketchQueries):
         # misread as dangling edges, forcing a rebuild per query)
         if self.maintainer is not None:
             self.maintainer.absorb(et, stats)
-        self.sketch = sketch_update(self.sketch, et,
-                                    use_kernel=self.use_kernel)
+        with self.telemetry.span("sketch.absorb"):
+            self.sketch = sketch_update(self.sketch, et,
+                                        use_kernel=self.use_kernel)
         self.commits += 1
         if self.hub is not None and self.commits % self.answer_every == 0:
             hk, hc = self.heavy_hitters(self.top_k)

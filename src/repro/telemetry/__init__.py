@@ -1,0 +1,66 @@
+"""`repro.telemetry` — spans, histograms, audit trail, exporters.
+
+The observability layer for the ingest->query path (ISSUE 7): a
+near-zero-overhead span/timer API over fixed log-bucket histograms
+(`spans`), a structured controller audit trail recording every
+Algorithm-2 decision with its full PerfMon input vector and its
+realized outcome (`audit`), and exporters — Chrome ``trace_event``
+(Perfetto), JSONL, text/TSV summary (`export`).
+
+Quickstart::
+
+    from repro.telemetry import TelemetryRegistry, write_chrome_trace
+    reg = TelemetryRegistry()
+    pipe = (PipelineBuilder(cfg).with_source(src)
+            .with_telemetry(reg).build())
+    pipe.run(max_ticks=300)
+    print(reg.summary()["commit.upsert"])   # p50/p95/p99 etc.
+    write_chrome_trace(reg, "trace.json")   # open in Perfetto
+
+or in one shot via the harness / CLIs::
+
+    run_scenario("flash_crowd", trace="trace.json")
+    python -m repro.launch.telemetry --scenario flash_crowd \
+        --trace-out trace.json
+"""
+from repro.telemetry.audit import INPUT_KEYS, AuditRecord, AuditTrail
+from repro.telemetry.export import (
+    chrome_trace,
+    summary_tsv,
+    text_summary,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+from repro.telemetry.spans import (
+    NBUCKETS,
+    NULL_REGISTRY,
+    NULL_SPAN,
+    Histogram,
+    Span,
+    TelemetryRegistry,
+    bucket_index,
+    bucket_lower_ns,
+    bucket_upper_ns,
+)
+
+__all__ = [
+    "AuditRecord",
+    "AuditTrail",
+    "Histogram",
+    "INPUT_KEYS",
+    "NBUCKETS",
+    "NULL_REGISTRY",
+    "NULL_SPAN",
+    "Span",
+    "TelemetryRegistry",
+    "bucket_index",
+    "bucket_lower_ns",
+    "bucket_upper_ns",
+    "chrome_trace",
+    "summary_tsv",
+    "text_summary",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]

@@ -58,6 +58,13 @@ class WorkloadReport:
     pattern_refs: int = 0        # total (pattern_id, bindings) references
     dict_hit_rate: float = 0.0   # dictionary hit rate over the whole run
     commit_ms_mean: float = 0.0  # mean successful-commit latency (ms)
+    # telemetry (repro.telemetry; empty when the registry is off)
+    telemetry_enabled: bool = False
+    # per-stage latency breakdown, aggregated across shards:
+    # {stage: {count, mean_ms, p50_ms, p95_ms, p99_ms, max_ms, total_s}}
+    stage_latency_ms: Dict[str, Dict[str, float]] = \
+        dataclasses.field(default_factory=dict)
+    audit_decisions: int = 0     # controller audit-trail records
 
     @property
     def n_transitions(self) -> int:
@@ -88,7 +95,19 @@ class WorkloadReport:
                f"hit_rate={self.dict_hit_rate:.3f} "
                f"commit_ms={self.commit_ms_mean:.2f}"
                if self.dict_compress else "")
+            + (self._stage_summary() if self.telemetry_enabled else "")
         )
+
+    def _stage_summary(self, top: int = 6) -> str:
+        if not self.stage_latency_ms:
+            return "\ntelemetry: on (no spans recorded)"
+        ranked = sorted(self.stage_latency_ms.items(),
+                        key=lambda kv: -kv[1].get("total_s", 0.0))[:top]
+        rows = "  ".join(
+            f"{name}: p50={st['p50_ms']:.2f} p95={st['p95_ms']:.2f}ms"
+            for name, st in ranked)
+        return (f"\ntelemetry: {len(self.stage_latency_ms)} stages, "
+                f"{self.audit_decisions} audited decisions | {rows}")
 
 
 def _timeline(samples: Dict, actions: List[str], shard: int) -> List[Dict]:
@@ -119,6 +138,9 @@ def run_scenario(
     edge_cap: Optional[int] = None,
     spill_dir: Optional[str] = None,
     on_event=None,
+    telemetry=None,
+    trace: Optional[str] = None,
+    trace_jsonl: Optional[str] = None,
 ) -> WorkloadReport:
     """Drive a pipeline through `scenario` and report (module docstring).
 
@@ -127,6 +149,13 @@ def run_scenario(
     `node_cap`/`edge_cap` shrink the store for CI-sized runs;
     `dict_compress` turns on the GraphZip dictionary-compression path
     (`PipelineBuilder.with_compression`).
+
+    `telemetry` turns on span telemetry + the controller audit trail
+    (pass True, or a `repro.telemetry.TelemetryRegistry` to keep for
+    inspection); `trace` writes a Perfetto-loadable Chrome trace there
+    after the run and `trace_jsonl` the flat JSONL sink — either
+    implies telemetry.  With telemetry on the report carries the
+    per-stage p50/p95/p99 latency breakdown (`stage_latency_ms`).
     """
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     ticks = int(ticks if ticks is not None else scn.ticks)
@@ -155,11 +184,20 @@ def run_scenario(
             hits[0] += float(ev.payload.get("dict_hit_rate", 0.0))
             hits[1] += 1
 
+    reg = None
+    if telemetry or trace or trace_jsonl:
+        from repro.telemetry import TelemetryRegistry
+
+        reg = telemetry if isinstance(telemetry, TelemetryRegistry) \
+            else TelemetryRegistry()
+
     b = (PipelineBuilder(cfg)
          .with_source(src)
          .simulated_consumer(speed=speed)
          .spill_dir(spill_dir or f"/tmp/repro_workload_{scn.name}_{seed}")
          .on_event(_count_drops))
+    if reg is not None:
+        b = b.with_telemetry(reg)
     if sketch_guided:
         b = b.sketch_guided()
     if dict_compress:
@@ -197,6 +235,18 @@ def run_scenario(
     ingestor = getattr(pipe.sink, "ingestor", None)
     commit_ms = [1e3 * c.busy_s for c in ingestor.commits if c.ok] \
         if ingestor is not None else []
+    stage_latency: Dict[str, Dict[str, float]] = {}
+    n_audit = 0
+    if reg is not None:
+        from repro.telemetry import write_chrome_trace, write_jsonl
+
+        stage_latency = reg.summary()
+        n_audit = len(reg.audit)
+        if trace:
+            write_chrome_trace(reg, trace, meta={
+                "scenario": scn.name, "seed": seed, "shards": shards})
+        if trace_jsonl:
+            write_jsonl(reg, trace_jsonl)
     return WorkloadReport(
         scenario=scn.name,
         seed=seed,
@@ -227,4 +277,7 @@ def run_scenario(
         pattern_refs=refs[0],
         dict_hit_rate=hits[0] / max(hits[1], 1),
         commit_ms_mean=float(np.mean(commit_ms)) if commit_ms else 0.0,
+        telemetry_enabled=reg is not None,
+        stage_latency_ms=stage_latency,
+        audit_decisions=n_audit,
     )
