@@ -1,0 +1,124 @@
+"""Resilience benchmark: checkpoint cost, recovery time, retry storm.
+
+Three numbers the fault-tolerance layer (repro.resilience) is judged
+on, recorded into BENCH_ingest.json's perf trajectory:
+
+  * checkpoint save/restore latency on a CI-sized flash_crowd pipeline
+    (blocking save, so the number is the full capture+write cost —
+    the background path hides most of it from the tick loop);
+  * recovery: kill mid-run, restore the latest checkpoint, and time
+    restore->first successful commit (the paper's ingestion pipeline
+    must come back fast after a collector dies);
+  * retry storm: throughput of `retry_archive` replaying a backlog of
+    archived batches once the store connection returns.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+TICKS = 48
+CRASH_AT = 24
+EVERY = 8
+NODE_CAP = 1 << 12
+EDGE_CAP = 1 << 14
+
+
+def bench_resilience() -> Tuple[List[Dict], Dict]:
+    from repro.resilience import (
+        FaultPlan, PipelineCheckpointer, PipelineKilled, RetryPolicy)
+    from repro.workloads import run_scenario
+
+    work = tempfile.mkdtemp(prefix="repro_bench_resil_")
+    kw = dict(ticks=TICKS, seed=3, node_cap=NODE_CAP, edge_cap=EDGE_CAP,
+              retry=RetryPolicy(jitter=0.0), checkpoint_every=EVERY)
+
+    # ---- checkpoint save/restore latency (blocking, after a warm run)
+    from repro.api import PipelineBuilder
+    from repro.configs.paper_ingest import IngestConfig
+    from repro.workloads.source import ScenarioSource
+
+    src = ScenarioSource("flash_crowd", seed=3)
+    pipe = (PipelineBuilder(IngestConfig(store_nodes=NODE_CAP,
+                                         store_edges=EDGE_CAP))
+            .with_source(src)
+            .simulated_consumer(speed=0.5)
+            .spill_dir(f"{work}/spill_lat")
+            .build())
+    pipe.run(max_ticks=24)
+    ck = PipelineCheckpointer(f"{work}/ck_lat", every=EVERY)
+    t0 = time.perf_counter()
+    ck.save(24, pipe, src, blocking=True)
+    save_s = time.perf_counter() - t0
+    src2 = ScenarioSource("flash_crowd", seed=3)
+    pipe2 = (PipelineBuilder(IngestConfig(store_nodes=NODE_CAP,
+                                          store_edges=EDGE_CAP))
+             .with_source(src2)
+             .simulated_consumer(speed=0.5)
+             .spill_dir(f"{work}/spill_lat2")
+             .build())
+    t0 = time.perf_counter()
+    ck.restore(pipe2, src2)
+    restore_s = time.perf_counter() - t0
+
+    # ---- recovery time: kill mid-run, resume, first commit ----------
+    plan = FaultPlan(crash_at_tick=CRASH_AT)
+    try:
+        run_scenario("flash_crowd", fault_plan=plan,
+                     checkpoint_dir=f"{work}/ck_rec",
+                     spill_dir=f"{work}/spill_rec", **kw)
+    except PipelineKilled:
+        pass
+    t0 = time.perf_counter()
+    rec = run_scenario("flash_crowd", fault_plan=plan.without_crash(),
+                       checkpoint_dir=f"{work}/ck_rec", resume=True,
+                       spill_dir=f"{work}/spill_rec", **kw)
+    recover_s = time.perf_counter() - t0
+
+    # ---- retry storm: replay an archived backlog in one drain -------
+    from repro.core.edge_table import from_raw_batch
+    from repro.core.ingestor import GraphIngestor
+    from repro.core.transform import create_edges, tweet_mapping
+    from repro.graphstore.store import init_store
+
+    state = {"down": True}
+    ing = GraphIngestor(init_store(NODE_CAP, EDGE_CAP),
+                        fail_hook=lambda: state["down"],
+                        retry_policy=RetryPolicy(jitter=0.0),
+                        max_archive=16, archive_dir=f"{work}/arch",
+                        degrade_after=1)
+    backlog = 32
+    for i in range(backlog):
+        recs = [{"id": f"b{i}_{j}", "user": f"u{i}_{j}", "hashtags": ["x"],
+                 "mentions": []} for j in range(8)]
+        et = from_raw_batch(create_edges(recs, tweet_mapping()), 64)
+        ing.push(et, now=1e6 * i)  # gate always open: probe + archive
+    state["down"] = False
+    t0 = time.perf_counter()
+    replayed = ing.retry_archive(now=1e12)
+    storm_s = time.perf_counter() - t0
+
+    shutil.rmtree(work, ignore_errors=True)
+
+    rows = [{
+        "us_per_call": round(save_s * 1e6, 1),  # headline: save latency
+        "checkpoint_save_ms": round(save_s * 1e3, 2),
+        "checkpoint_restore_ms": round(restore_s * 1e3, 2),
+        "recover_to_done_s": round(recover_s, 3),
+        "resumed_from_tick": rec.resumed_from_tick,
+        "retry_storm_batches": replayed,
+        "retry_storm_batches_per_s": round(replayed / max(storm_s, 1e-9), 1),
+        "archive_spilled_to_disk": backlog > 16,
+    }]
+    derived = {
+        "checkpoint_save_ms": rows[0]["checkpoint_save_ms"],
+        "checkpoint_restore_ms": rows[0]["checkpoint_restore_ms"],
+        "recover_to_done_s": rows[0]["recover_to_done_s"],
+        "retry_storm_batches_per_s": rows[0]["retry_storm_batches_per_s"],
+        "no_batch_lost": ing.archived_total
+        == ing.replayed + ing.archive_depth,
+        "resume_digest_nonempty": bool(rec.store_digest),
+    }
+    return rows, derived

@@ -25,7 +25,7 @@ import time
 # bench names whose results belong in the BENCH_ingest.json trajectory
 TRAJECTORY_BENCHES = ("ingest_trajectory", "store_ingest", "snapshot_build",
                       "workload_scenarios", "compress_dictionary",
-                      "telemetry_overhead")
+                      "telemetry_overhead", "resilience_chaos")
 
 BENCHES = [
     # (name, module, function, paper ref)
@@ -42,6 +42,7 @@ BENCHES = [
     ("workload_scenarios", "benchmarks.bench_workloads", "bench_scenarios", "scenario family (Alg 2 under adversarial streams)"),
     ("compress_dictionary", "benchmarks.bench_compress", "bench_compress_dictionary", "GraphZip dictionary compression (Fig 13 + refs)"),
     ("telemetry_overhead", "benchmarks.bench_telemetry", "bench_telemetry_overhead", "observability cost (spans on vs off, steady_state)"),
+    ("resilience_chaos", "benchmarks.bench_resilience", "bench_resilience", "checkpoint/resume + backoff retry (repro.resilience)"),
     ("sketch_update", "benchmarks.bench_query", "bench_sketch_update", "GSS/TCM sketch (Gou 2018)"),
     ("snapshot_build", "benchmarks.bench_query", "bench_snapshot_build", "store->CSR compaction"),
     ("query_latency", "benchmarks.bench_query", "bench_query_latency", "streaming graph queries (Pacaci 2021)"),

@@ -57,6 +57,9 @@ class PipelineBuilder:
         self._dict_stage = None
         self._compression_kw = None
         self._telemetry = None
+        self._fault_plan = None
+        self._fault_injector = None
+        self._retry = None
 
     # ---- parts ----
     def with_source(self, source) -> "PipelineBuilder":
@@ -204,6 +207,39 @@ class PipelineBuilder:
         self._hooks.append(hook)
         return self
 
+    # ---- resilience (repro.resilience) ----
+    def with_faults(self, plan) -> "PipelineBuilder":
+        """Counter-deterministic fault injection: wire a `FaultPlan`
+        (or a ready `FaultInjector`) as the sink ingestor's `fail_hook`
+        at build time.  Read the injector back via `.fault_injector`
+        (e.g. to inspect the attempt counter after a run)."""
+        self._fault_plan = plan
+        return self
+
+    @property
+    def fault_injector(self):
+        """The `FaultInjector` wired by `with_faults` (after build())."""
+        return self._fault_injector
+
+    def with_retry(self, policy=None, *, max_archive: Optional[int] = None,
+                   pool_cap: Optional[int] = None,
+                   archive_dir: Optional[str] = None,
+                   degrade_after: Optional[int] = None) -> "PipelineBuilder":
+        """Backoff-governed commit retry: attach a `RetryPolicy`
+        (default-constructed when none is given) to the sink's
+        ingestor at build time.  This arms the per-tick auto-retry in
+        the loop, the exponential-backoff gate, the degraded push mode,
+        and — via the keyword overrides — the bounded archive
+        (`max_archive` in-memory batches, disk spill beyond) and the
+        pool hard cap."""
+        from repro.resilience import RetryPolicy
+
+        self._retry = (policy if policy is not None else RetryPolicy(), {
+            "max_archive": max_archive, "pool_cap": pool_cap,
+            "archive_dir": archive_dir, "degrade_after": degrade_after,
+        })
+        return self
+
     # ---- assembly ----
     def _resolve_stages(self):
         """Materialise the sketch slot with the builder's mapping/cap."""
@@ -270,6 +306,25 @@ class PipelineBuilder:
             ingestor = getattr(sink, "ingestor", None)
             if ingestor is not None and hasattr(ingestor, "commit_hooks"):
                 ingestor.commit_hooks.append(self._dict_stage.observe_commit)
+        if self._fault_plan is not None or self._retry is not None:
+            ingestor = getattr(sink, "ingestor", None)
+            if ingestor is None:
+                raise ValueError("with_faults()/with_retry() need a sink "
+                                 "with a GraphIngestor underneath")
+            if self._fault_plan is not None:
+                from repro.resilience import FaultInjector, FaultPlan
+
+                self._fault_injector = (
+                    FaultInjector(self._fault_plan)
+                    if isinstance(self._fault_plan, FaultPlan)
+                    else self._fault_plan)
+                ingestor.fail_hook = self._fault_injector
+            if self._retry is not None:
+                policy, overrides = self._retry
+                ingestor.retry_policy = policy
+                for name, val in overrides.items():
+                    if val is not None:
+                        setattr(ingestor, name, val)
 
         if self._n_shards > 1:
             if self._uncontrolled:

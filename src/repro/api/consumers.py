@@ -42,6 +42,14 @@ class SimulatedConsumer:
         """alpha (Eq. 3): seconds of work queued at the consumer."""
         return self._backlog / self.capacity
 
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> dict:
+        return {"backlog": self._backlog, "mu": self._mu}
+
+    def restore_state(self, s: dict) -> None:
+        self._backlog = float(s["backlog"])
+        self._mu = float(s["mu"])
+
 
 class MeasuredConsumer:
     """Occupancy measured from real commits on a `GraphIngestor`."""

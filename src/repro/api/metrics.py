@@ -21,7 +21,11 @@ from repro.telemetry.spans import TelemetryRegistry
 @dataclasses.dataclass
 class PipelineEvent:
     """One loop event.  `kind` is one of: tick, push, hold, throttle,
-    spill, drain, commit, commit-failed, sample, report."""
+    spill, drain, commit, commit-failed, sample, report — plus the
+    resilience audit events (repro.resilience): retry (archived
+    batches replayed), degraded (batch archived while the store is
+    down), pool_overflow (pool hard cap diverted a batch to the
+    archive), checkpoint (step written)."""
 
     kind: str
     t: float
@@ -89,6 +93,16 @@ class MetricsHub:
         self.trace.append(sample)
         self.emit("sample", sample.t, action=sample.action, mu=sample.mu,
                   beta=sample.beta, spill_depth=sample.spill_depth)
+
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> dict:
+        return {"trace": list(self.trace), "counters": dict(self.counters)}
+
+    def restore_state(self, s: dict) -> None:
+        self.trace = list(s["trace"])
+        c = self.counters  # the registry's live Counter: mutate in place
+        c.clear()
+        c.update(s["counters"])
 
     # ---- trace -> arrays (same layout the seed controller produced) ----
     def trace_arrays(self):

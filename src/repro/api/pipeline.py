@@ -25,6 +25,27 @@ from repro.configs.paper_ingest import IngestConfig
 from repro.core.buffer import PerfSample
 
 
+def maybe_retry_archive(sink, hub: MetricsHub, now: float) -> int:
+    """Backoff-governed archive replay (repro.resilience): runs every
+    tick, but ONLY when the sink's ingestor carries a `RetryPolicy` —
+    legacy pipelines (no policy) keep the manual `retry_archive()`
+    surface and never auto-retry.  The policy's gate makes this cheap:
+    while the backoff window is open the call returns without touching
+    the store, so a dead connection is probed exponentially rarely
+    instead of once per tick."""
+    ing = getattr(sink, "ingestor", None)
+    if ing is None or getattr(ing, "retry_policy", None) is None:
+        return 0
+    if not getattr(ing, "archive_depth", 0):
+        return 0
+    with hub.telemetry.span("retry.archive"):
+        n = sink.retry_archive(now) if hasattr(sink, "retry_archive") \
+            else ing.retry_archive(now)
+    if n:
+        hub.emit("retry", now, replayed=n, remaining=ing.archive_depth)
+    return n
+
+
 def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
                     hub: MetricsHub, state: dict, now: float, dt: float,
                     consume_dt: Optional[float] = None):
@@ -65,6 +86,10 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
                      pressure=out.get("pressure", 0.0),
                      refs=out.get("refs", 0),
                      dict_hit_rate=out.get("dict_hit_rate", 0.0))
+            if out.get("pool_overflow"):
+                hub.emit("pool_overflow", now, total=out["pool_overflow"])
+            if out.get("degraded"):
+                hub.emit("degraded", now, archived=out.get("archived", 0))
             if committed:
                 # table pressure -> Algorithm-2 controller (back-pressure)
                 pm.observe_pressure(out.get("pressure", 0.0),
@@ -114,6 +139,10 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
                               "hold", buf.spill_depth, 1.0,
                               consumer.delay_s))
 
+    # archived batches replay on every action (the connection may be
+    # back while the controller holds/throttles) — policy-gated, above
+    maybe_retry_archive(sink, hub, now)
+
 
 class StreamPipeline:
     def __init__(
@@ -148,6 +177,10 @@ class StreamPipeline:
         self.uncontrolled = uncontrolled
         self.metrics = metrics or MetricsHub()
         self.telemetry = self.metrics.telemetry
+        # cross-tick loop scalars; owned by the pipeline (not run()) so
+        # checkpoint/resume (repro.resilience) can capture and restore
+        # them — a resumed run continues the totals, not restarts them
+        self.loop_state: Optional[dict] = None
 
     # ---- convenience accessors ----
     @property
@@ -194,10 +227,12 @@ class StreamPipeline:
         buf = self.buffer_stage
         pm = buf.perfmon
         hub = self.metrics
-        total_records = 0
         t_start = time.time()
-        state = {"last_beta_e": self.cfg.beta_init, "last_mu": 0.0,
-                 "instr": 0, "raw": 0, "crs": []}
+        state = self.loop_state
+        if state is None:
+            state = {"last_beta_e": self.cfg.beta_init, "last_mu": 0.0,
+                     "records": 0, "instr": 0, "raw": 0, "crs": []}
+            self.loop_state = state
 
         tel = self.telemetry
         for i, tick in enumerate(source_ticks):
@@ -211,7 +246,7 @@ class StreamPipeline:
                     recs = self.filter_stage(tick.records, ctx)
                 for stage in self.stages:
                     recs = stage(recs, ctx)
-                total_records += len(recs)
+                state["records"] += len(recs)
                 pm.observe_rate(now, len(recs))
                 hub.emit("tick", now, raw=len(tick.records), kept=len(recs))
                 # ---- 2. buffer ----
@@ -234,11 +269,43 @@ class StreamPipeline:
                                               *pm.velocity(), "push",
                                               buf.spill_depth, cr,
                                               self.consumer.delay_s))
+                    maybe_retry_archive(self.sink, hub, now)
                     continue
 
                 # ---- 3-7. controlled path ----
                 controlled_tick(buf, self.transform, self.sink,
                                 self.consumer, hub, state, now, dt)
 
-        return hub.build_report(total_records, state["instr"], state["raw"],
-                                state["crs"], time.time() - t_start)
+        return hub.build_report(state["records"], state["instr"],
+                                state["raw"], state["crs"],
+                                time.time() - t_start)
+
+    # ---- checkpoint surface (repro.resilience) -----------------------
+    def state(self) -> dict:
+        """Host-side resumable state: everything the checkpointer's
+        array manifest does not cover (see resilience/checkpoint.py)."""
+        s: dict = {
+            "loop": None if self.loop_state is None else
+                {**self.loop_state, "crs": list(self.loop_state["crs"])},
+            "buffer": self.buffer_stage.state(),
+            "metrics": self.metrics.state(),
+            "stages": [st.state() if hasattr(st, "state") else None
+                       for st in self.stages],
+        }
+        if hasattr(self.consumer, "state"):
+            s["consumer"] = self.consumer.state()
+        if hasattr(self.sink, "state"):
+            s["sink"] = self.sink.state()
+        return s
+
+    def restore_state(self, s: dict) -> None:
+        self.loop_state = None if s["loop"] is None else dict(s["loop"])
+        self.buffer_stage.restore_state(s["buffer"])
+        self.metrics.restore_state(s["metrics"])
+        for st, st_s in zip(self.stages, s["stages"]):
+            if st_s is not None and hasattr(st, "restore_state"):
+                st.restore_state(st_s)
+        if "consumer" in s and hasattr(self.consumer, "restore_state"):
+            self.consumer.restore_state(s["consumer"])
+        if "sink" in s and hasattr(self.sink, "restore_state"):
+            self.sink.restore_state(s["sink"])

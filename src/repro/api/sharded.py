@@ -94,6 +94,9 @@ class ShardedPipeline:
         # shard index, so on_event() subscribers see the whole fleet
         for si, hub in enumerate(self._hubs):
             hub.subscribe(lambda ev, si=si: self._forward(ev, si))
+        # per-shard cross-tick loop scalars; pipeline-owned so
+        # checkpoint/resume (repro.resilience) can capture/restore them
+        self.loop_states: Optional[List[dict]] = None
 
     def _forward(self, ev: PipelineEvent, shard: int):
         # route through emit (not the hooks directly) so the aggregate
@@ -136,12 +139,14 @@ class ShardedPipeline:
                 raise ValueError("no source: pass source_ticks or set source")
             source_ticks = self.source.ticks()
         t_start = time.time()
-        total_records = 0
-        states = [
-            {"last_beta_e": self.cfg.beta_init, "last_mu": 0.0,
-             "records": 0, "instr": 0, "raw": 0, "crs": []}
-            for _ in range(self.n_shards)
-        ]
+        states = self.loop_states
+        if states is None:
+            states = [
+                {"last_beta_e": self.cfg.beta_init, "last_mu": 0.0,
+                 "records": 0, "instr": 0, "raw": 0, "crs": []}
+                for _ in range(self.n_shards)
+            ]
+            self.loop_states = states
         tel = self.telemetry
         for i, tick in enumerate(source_ticks):
             if i >= max_ticks:
@@ -153,7 +158,6 @@ class ShardedPipeline:
                     recs = self.filter_stage(tick.records, ctx)
                 for stage in self.stages:
                     recs = stage(recs, ctx)
-                total_records += len(recs)
                 self.metrics.emit("tick", now, raw=len(tick.records),
                                   kept=len(recs))
                 with tel.span("partition"):
@@ -162,6 +166,9 @@ class ShardedPipeline:
                     self._shard_step(si, part, now, dt, states[si])
 
         wall = time.time() - t_start
+        # the partition is total: per-shard record counts sum to the
+        # filtered stream (and survive checkpoint/resume, unlike a local)
+        total_records = sum(st["records"] for st in states)
         reports = [
             hub.build_report(
                 total_records=st["records"],
@@ -182,3 +189,36 @@ class ShardedPipeline:
             drain_events=sum(h.counters["drain"] for h in self._hubs),
             wall_s=wall,
         )
+
+    # ---- checkpoint surface (repro.resilience) -----------------------
+    def state(self) -> dict:
+        s: dict = {
+            "loops": None if self.loop_states is None else
+                [{**st, "crs": list(st["crs"])} for st in self.loop_states],
+            "shards": [b.state() for b in self.shards],
+            "hubs": [h.state() for h in self._hubs],
+            "metrics": self.metrics.state(),
+            "stages": [st.state() if hasattr(st, "state") else None
+                       for st in self.stages],
+        }
+        if hasattr(self.consumer, "state"):
+            s["consumer"] = self.consumer.state()
+        if hasattr(self.sink, "state"):
+            s["sink"] = self.sink.state()
+        return s
+
+    def restore_state(self, s: dict) -> None:
+        self.loop_states = None if s["loops"] is None else \
+            [dict(st) for st in s["loops"]]
+        for b, b_s in zip(self.shards, s["shards"]):
+            b.restore_state(b_s)
+        for h, h_s in zip(self._hubs, s["hubs"]):
+            h.restore_state(h_s)
+        self.metrics.restore_state(s["metrics"])
+        for st, st_s in zip(self.stages, s["stages"]):
+            if st_s is not None and hasattr(st, "restore_state"):
+                st.restore_state(st_s)
+        if "consumer" in s and hasattr(self.consumer, "restore_state"):
+            self.consumer.restore_state(s["consumer"])
+        if "sink" in s and hasattr(self.sink, "restore_state"):
+            self.sink.restore_state(s["sink"])

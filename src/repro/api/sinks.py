@@ -38,3 +38,10 @@ class GraphStoreSink:
     @property
     def store(self) -> GraphStore:
         return self.ingestor.store
+
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> Dict:
+        return {"ingestor": self.ingestor.state()}
+
+    def restore_state(self, s: Dict) -> None:
+        self.ingestor.restore_state(s["ingestor"])

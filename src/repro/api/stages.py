@@ -115,6 +115,19 @@ class BufferControlStage:
         self.buffer.extend(self.controller.spill.drain())
         self.max_buffered = max(self.max_buffered, len(self.buffer))
 
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> dict:
+        return {
+            "buffer": list(self.buffer),
+            "max_buffered": self.max_buffered,
+            "controller": self.controller.state(),
+        }
+
+    def restore_state(self, s: dict) -> None:
+        self.buffer = list(s["buffer"])
+        self.max_buffered = int(s["max_buffered"])
+        self.controller.restore_state(s["controller"])
+
     # ---- controller passthrough ----
     def decide(self, size_est: float, density: float,
                now: Optional[float] = None) -> ControllerDecision:

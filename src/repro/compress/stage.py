@@ -232,6 +232,17 @@ class DictionaryStage:
         self.ticks_seen += 1
         return records
 
+    # ---- checkpoint surface (repro.resilience); the dictionary itself
+    # snapshots as array leaves (lazily re-templated on restore) ----
+    def state(self) -> dict:
+        return {"ticks_seen": self.ticks_seen, "rewrites": self.rewrites,
+                "refs_total": self.refs_total}
+
+    def restore_state(self, s: dict) -> None:
+        self.ticks_seen = int(s["ticks_seen"])
+        self.rewrites = int(s["rewrites"])
+        self.refs_total = int(s["refs_total"])
+
     # ---- rewrite path ----
     def _ensure(self, kd):
         if self.dct is None or self.dct.sig.dtype != kd:

@@ -150,6 +150,42 @@ class PerfMon:
         s = float(P.cpu_slope(np.asarray(self.mu_hist, np.float32)))
         return beta_e, mu_exp, s
 
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> dict:
+        import jax
+
+        npify = lambda t: jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), t)
+        return {
+            "beta_model": npify(self.beta_model),
+            "mu_model": npify(self.mu_model),
+            "mu_hist": list(self.mu_hist),
+            "rate_hist": list(self.rate_hist),
+            "rho_hist": list(self.rho_hist),
+            "table_pressure": self.table_pressure,
+            "dropped_inserts": self.dropped_inserts,
+            "sketch_rho": self.sketch_rho,
+            "dict_hit": self.dict_hit,
+        }
+
+    def restore_state(self, s: dict) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        devify = lambda t: jax.tree_util.tree_map(jnp.asarray, t)
+        self.beta_model = devify(s["beta_model"])
+        self.mu_model = devify(s["mu_model"])
+        self.mu_hist = collections.deque(s["mu_hist"],
+                                         maxlen=self.mu_hist.maxlen)
+        self.rate_hist = collections.deque(s["rate_hist"],
+                                           maxlen=self.rate_hist.maxlen)
+        self.rho_hist = collections.deque(s["rho_hist"],
+                                          maxlen=self.rho_hist.maxlen)
+        self.table_pressure = float(s["table_pressure"])
+        self.dropped_inserts = int(s["dropped_inserts"])
+        self.sketch_rho = s["sketch_rho"]
+        self.dict_hit = s["dict_hit"]
+
 
 class SpillStore:
     """Data-throttling spill file (Alg. 2 FlushDataToDisk / LoadFromDisk)."""
@@ -179,6 +215,26 @@ class SpillStore:
     @property
     def depth(self) -> int:
         return len(self._order)
+
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> dict:
+        """Spill-file CONTENTS, not just names: files drained between a
+        checkpoint and a crash would otherwise be unreadable on resume."""
+        files = []
+        for fn in self._order:
+            with open(fn, "rb") as f:
+                files.append((os.path.basename(fn), f.read()))
+        return {"n": self._n, "files": files}
+
+    def restore_state(self, s: dict) -> None:
+        os.makedirs(self.path, exist_ok=True)
+        self._order = []
+        for base, blob in s["files"]:
+            fn = os.path.join(self.path, base)
+            with open(fn, "wb") as f:
+                f.write(blob)
+            self._order.append(fn)
+        self._n = int(s["n"])
 
 
 @dataclasses.dataclass
@@ -275,6 +331,25 @@ class BufferController:
 
     def record(self, sample: PerfSample):
         self.trace.append(sample)
+
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> dict:
+        return {
+            "beta": self.beta,
+            "perfmon": self.perfmon.state(),
+            "spill": self.spill.state(),
+            "trace": list(self.trace),
+            "decision_counts": dict(self.decision_counts),
+            "pressure_throttles": self.pressure_throttles,
+        }
+
+    def restore_state(self, s: dict) -> None:
+        self.beta = int(s["beta"])
+        self.perfmon.restore_state(s["perfmon"])
+        self.spill.restore_state(s["spill"])
+        self.trace = list(s["trace"])
+        self.decision_counts = collections.Counter(s["decision_counts"])
+        self.pressure_throttles = int(s["pressure_throttles"])
 
     def trace_arrays(self):
         keys = [f.name for f in dataclasses.fields(PerfSample) if f.name != "action"]

@@ -6,15 +6,34 @@ tables into store commits, respecting a bounded ingestion pool
 retry.  The consumer-occupancy measurement lives here: mu = busy-time
 of the ingest engine over the sampling window — the TPU-native stand-in
 for the paper's Zabbix CPU-user-time (DESIGN.md §2).
+
+Resilience posture (repro.resilience):
+  * the archive is BOUNDED — past `max_archive` in-memory batches,
+    failed commits spill to disk (pickled host pytrees) and refill
+    FIFO as retries drain them, so a long outage cannot OOM the host;
+  * the pool has a hard cap (`pool_cap`, default 4x `max_pool_size`):
+    overflow batches divert to the archive instead of growing the
+    deque without bound, counted in `pool_overflows`;
+  * with a `RetryPolicy` attached, consecutive commit failures arm a
+    capped-exponential-backoff gate (`next_retry_t`): `retry_archive`
+    refuses to hot-loop while the gate is closed, and after
+    `degrade_after` consecutive failures `push` enters DEGRADED mode —
+    batches archive directly without hammering the dead store, while
+    sketch/telemetry service upstream continues.  With no policy
+    (the default) every legacy behavior is unchanged.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import os
+import pickle
+import tempfile
 import time
 from typing import Deque, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.core.edge_table import EdgeTable
 from repro.graphstore.store import GraphStore, commit_compressed, ingest_step
@@ -34,15 +53,25 @@ class CommitRecord:
     refs: int = 0  # dictionary pattern references applied (repro.compress)
 
 
+def _to_host(et):
+    """Edge-table pytree -> host numpy leaves (pickle/spill-safe)."""
+    return jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), et)
+
+
 class GraphIngestor:
     def __init__(self, store: GraphStore, max_pool_size: int = 4, fail_hook=None,
-                 occupancy_window: float = 10.0):
+                 occupancy_window: float = 10.0, retry_policy=None,
+                 pool_cap: Optional[int] = None, max_archive: int = 128,
+                 archive_dir: Optional[str] = None, degrade_after: int = 3):
         self.store = store
         self.max_pool_size = max_pool_size
+        # hard admission ceiling: beyond it, batches divert to the archive
+        self.pool_cap = pool_cap if pool_cap is not None else 4 * max_pool_size
         self.pool: Deque[EdgeTable] = collections.deque()
-        self.archive: List[EdgeTable] = []  # failed commits (Alg. 3 line 18)
+        self.archive: Deque[EdgeTable] = collections.deque()  # Alg. 3 line 18
         self.commits: List[CommitRecord] = []
-        self.fail_hook = fail_hook  # fault injection for tests
+        self.fail_hook = fail_hook  # fault injection (nullary, or a
+        # repro.resilience.FaultInjector with `wants_now = True`)
         # observers of every SUCCESSFUL commit: hook(et, stats).  Push can
         # drain pooled batches and retry_archive replays old ones, so a
         # commit-consistent observer (e.g. repro.query.QuerySink) must
@@ -59,11 +88,84 @@ class GraphIngestor:
         # NULL_REGISTRY = disabled; PipelineBuilder.with_telemetry swaps
         # in the live registry.
         self.telemetry = NULL_REGISTRY
+        # ---- resilience (repro.resilience; None policy = legacy) ----
+        self.retry_policy = retry_policy
+        self.max_archive = max_archive
+        self.archive_dir = archive_dir
+        self.degrade_after = degrade_after
+        self._archive_spill: List[str] = []  # on-disk overflow, FIFO
+        self._archive_n = 0  # monotone spill-file counter
+        self.consecutive_failures = 0
+        self.next_retry_t = float("-inf")  # backoff gate (simulated time)
+        # accounting: archived_total == replayed + archive_depth must
+        # hold at all times (the chaos harness's no-batch-lost invariant)
+        self.archived_total = 0
+        self.replayed = 0
+        self.attempts = 0
+        self.pool_overflows = 0
+
+    # ---- archive (bounded, disk-spilled past max_archive) -----------
+    @property
+    def archive_depth(self) -> int:
+        """Failed batches awaiting replay, memory + disk."""
+        return len(self.archive) + len(self._archive_spill)
+
+    @property
+    def degraded(self) -> bool:
+        """Store considered down: policy attached and the consecutive-
+        failure count passed `degrade_after`."""
+        return (self.retry_policy is not None
+                and self.consecutive_failures >= self.degrade_after)
+
+    def _spill_path(self) -> str:
+        if self.archive_dir is None:
+            self.archive_dir = tempfile.mkdtemp(prefix="repro_archive_")
+        os.makedirs(self.archive_dir, exist_ok=True)
+        fn = os.path.join(self.archive_dir,
+                          f"archive_{self._archive_n:08d}.pkl")
+        self._archive_n += 1
+        return fn
+
+    def _archive_put(self, et) -> None:
+        self.archived_total += 1
+        # keep FIFO across the memory/disk boundary: once anything
+        # spilled, later batches must spill too or replay reorders
+        if self._archive_spill or len(self.archive) >= self.max_archive:
+            fn = self._spill_path()
+            with open(fn, "wb") as f:
+                pickle.dump(_to_host(et), f, pickle.HIGHEST_PROTOCOL)
+            self._archive_spill.append(fn)
+            self.telemetry.count("archive.spilled")
+        else:
+            self.archive.append(et)
+
+    def _archive_refill(self) -> None:
+        """Pull spilled batches back into memory headroom, in order."""
+        while self._archive_spill and len(self.archive) < self.max_archive:
+            fn = self._archive_spill.pop(0)
+            with open(fn, "rb") as f:
+                self.archive.append(pickle.load(f))
+            os.unlink(fn)
 
     # ------------------------------------------------------------------
     def push(self, et: EdgeTable, now: Optional[float] = None) -> dict:
         """GRAPHPUSH: pool admission + commit.  Returns commit stats."""
+        if self.retry_policy is not None and self.degraded:
+            wall = now if now is not None else time.time()
+            if wall < self.next_retry_t:
+                # degraded mode: the store is down and the backoff gate
+                # is closed — preserve the batch without a doomed probe
+                self._archive_put(et)
+                return {"committed": False, "archived": self.archive_depth,
+                        "degraded": True}
         if len(self.pool) >= self.max_pool_size:
+            if len(self.pool) >= self.pool_cap:
+                # hard cap: divert to the archive instead of unbounded
+                # pool growth under sustained failure
+                self.pool_overflows += 1
+                self._archive_put(et)
+                return {"committed": False, "pooled": len(self.pool),
+                        "pool_overflow": self.pool_overflows}
             # pool full: hold in local memory until timeout (paper §III-B)
             self.pool.append(et)
             return {"committed": False, "pooled": len(self.pool)}
@@ -76,12 +178,18 @@ class GraphIngestor:
                 break
         return stats
 
-    def _commit(self, et: EdgeTable, now: Optional[float]) -> dict:
+    def _commit(self, et: EdgeTable, now: Optional[float],
+                archive_on_fail: bool = True) -> dict:
         tel = self.telemetry
+        wall = now if now is not None else time.time()
         t0 = time.perf_counter()
+        self.attempts += 1
         try:
-            if self.fail_hook is not None and self.fail_hook():
-                raise ConnectionError("injected commit failure")
+            if self.fail_hook is not None:
+                fh = self.fail_hook
+                hit = fh(wall) if getattr(fh, "wants_now", False) else fh()
+                if hit:
+                    raise ConnectionError("injected commit failure")
             compressed = hasattr(et, "residual")
             with tel.span("commit.upsert"):
                 if compressed:
@@ -94,8 +202,9 @@ class GraphIngestor:
             self.store = new_store
             busy = time.perf_counter() - t0
             tel.observe("commit.total", busy)
-            wall = now if now is not None else time.time()
             self._busy.append((wall, busy))
+            self.consecutive_failures = 0
+            self.next_retry_t = float("-inf")
             rec = CommitRecord(
                 t=wall,
                 busy_s=busy,
@@ -132,22 +241,49 @@ class GraphIngestor:
                 out["dict_hit_rate"] = float(s["dict_hit_rate"])
             return out
         except ConnectionError:
-            # commit failed (network/DBMS) -> archive for replay
-            self.archive.append(et)
+            # commit failed (network/DBMS) -> archive for replay.
+            # `wall`, not `now or time.time()`: now=0.0 is falsy, so the
+            # old form stamped simulated-clock failures with wall time.
+            self.consecutive_failures += 1
+            out = {"committed": False}
+            if self.retry_policy is not None:
+                delay = self.retry_policy.delay(self.consecutive_failures - 1)
+                self.next_retry_t = wall + delay
+                out["retry_in_s"] = delay
+                tel.count("retry.backoff")
+                if self.degraded:
+                    out["degraded"] = True
+            if archive_on_fail:
+                self._archive_put(et)
             self.commits.append(
-                CommitRecord(now or time.time(), 0.0, 0, 0, 0, ok=False)
+                CommitRecord(wall, 0.0, 0, 0, 0, ok=False)
             )
-            return {"committed": False, "archived": len(self.archive)}
+            out["archived"] = self.archive_depth
+            return out
 
     # ------------------------------------------------------------------
     def retry_archive(self, now: Optional[float] = None) -> int:
-        """Re-commit archived batches (connection restored)."""
+        """Re-commit archived batches (connection restored).  With a
+        `RetryPolicy` attached the backoff gate is honoured: while
+        `now < next_retry_t` nothing is attempted (no hot-looping);
+        one probe failure re-arms the gate with the next delay."""
+        if self.retry_policy is not None:
+            wall = now if now is not None else time.time()
+            if wall < self.next_retry_t:
+                return 0
         n = 0
-        while self.archive:
-            et = self.archive.pop(0)
-            if not self._commit(et, now)["committed"]:
-                break
-            n += 1
+        while self.archive_depth:
+            self._archive_refill()
+            et = self.archive.popleft()
+            if self._commit(et, now, archive_on_fail=False)["committed"]:
+                n += 1
+                self.replayed += 1
+                continue
+            # failed head returns to the FRONT: replay order is FIFO
+            self.archive.appendleft(et)
+            break
+        if n:
+            self.telemetry.count("retry.replayed", n)
         return n
 
     def occupancy(self, now: float, sim_busy: Optional[float] = None) -> float:
@@ -163,3 +299,54 @@ class GraphIngestor:
         busy = [b for (_, b) in self._busy]
         mean_busy = sum(busy) / len(busy) if busy else 0.0
         return len(self.pool) * mean_busy
+
+    # ---- checkpoint surface (repro.resilience) -----------------------
+    def state(self) -> dict:
+        """Everything except `store` (which snapshots as array leaves):
+        pool/archive batches as host pytrees, archive spill CONTENTS
+        (the files may be gone by restore time), counters, the backoff
+        gate, and the fault injector's attempt counter when present."""
+        spilled = []
+        for fn in self._archive_spill:
+            with open(fn, "rb") as f:
+                spilled.append(f.read())  # already-pickled host pytree
+        fh = self.fail_hook
+        return {
+            "pool": [_to_host(et) for et in self.pool],
+            "archive": [_to_host(et) for et in self.archive],
+            "archive_spill": spilled,
+            "archive_n": self._archive_n,
+            "commits": list(self.commits),
+            "busy": list(self._busy),
+            "attempts": self.attempts,
+            "archived_total": self.archived_total,
+            "replayed": self.replayed,
+            "pool_overflows": self.pool_overflows,
+            "consecutive_failures": self.consecutive_failures,
+            "next_retry_t": self.next_retry_t,
+            "fail_hook": fh.state() if hasattr(fh, "state") else None,
+        }
+
+    def restore_state(self, s: dict) -> None:
+        self.pool = collections.deque(s["pool"])
+        self.archive = collections.deque(s["archive"])
+        self._archive_spill = []
+        self._archive_n = int(s["archive_n"])
+        for blob in s["archive_spill"]:
+            # rewrite under fresh (still-monotone) names: the original
+            # files may live in a dead temp dir or have been drained
+            fn = self._spill_path()
+            with open(fn, "wb") as f:
+                f.write(blob)
+            self._archive_spill.append(fn)
+        self.commits = list(s["commits"])
+        self._busy = collections.deque(s["busy"], maxlen=self._busy.maxlen)
+        self.attempts = int(s["attempts"])
+        self.archived_total = int(s["archived_total"])
+        self.replayed = int(s["replayed"])
+        self.pool_overflows = int(s["pool_overflows"])
+        self.consecutive_failures = int(s["consecutive_failures"])
+        self.next_retry_t = float(s["next_retry_t"])
+        if s.get("fail_hook") is not None \
+                and hasattr(self.fail_hook, "restore_state"):
+            self.fail_hook.restore_state(s["fail_hook"])

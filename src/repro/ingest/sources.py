@@ -118,7 +118,12 @@ class BurstyTweetSource:
 
 
 class FileReplaySource:
-    """Replay a jsonl file at `rate_multiplier` x its natural rate."""
+    """Replay a jsonl file at `rate_multiplier` x its natural rate.
+
+    The replay cursor — byte offset, undelivered record buffer and the
+    fractional-rate carry — lives on the instance, so a checkpoint
+    (repro.resilience) can capture it mid-file and a resumed source
+    continues from the exact next record."""
 
     def __init__(self, path: str, rate_multiplier: float = 1.0, dt: float = 1.0,
                  natural_rate: float = 4.9):
@@ -126,28 +131,45 @@ class FileReplaySource:
         self.rate = natural_rate * rate_multiplier
         self.dt = dt
         self.t = 0.0
+        self._offset = 0  # byte offset of the next unread line
+        self._buf: List[dict] = []  # read but not yet delivered
+        self._acc = 0.0  # fractional-record carry (non-integer rates)
 
     def ticks(self) -> Iterator[StreamTick]:
-        buf: List[dict] = []
         per_tick = self.rate * self.dt
         if per_tick <= 0:
             raise ValueError("replay rate must be positive")
-        acc = 0.0  # fractional-record carry so non-integer rates don't drift
         with open(self.path) as f:
-            for line in f:
-                buf.append(json.loads(line))
-                want = acc + per_tick
+            f.seek(self._offset)
+            while True:
+                line = f.readline()
+                if not line:
+                    break
+                self._offset = f.tell()
+                self._buf.append(json.loads(line))
+                want = self._acc + per_tick
                 k = int(want)
-                if len(buf) >= k:
-                    acc = want - k
-                    out, buf = buf[:k], buf[k:]
+                if len(self._buf) >= k:
+                    self._acc = want - k
+                    out, self._buf = self._buf[:k], self._buf[k:]
                     self.t += self.dt
                     yield StreamTick(self.t, out)
         # drain the tail at the programmed rate (no EOF burst)
-        while buf:
-            want = acc + per_tick
-            k = min(int(want), len(buf))
-            acc = want - k
-            out, buf = buf[:k], buf[k:]
+        while self._buf:
+            want = self._acc + per_tick
+            k = min(int(want), len(self._buf))
+            self._acc = want - k
+            out, self._buf = self._buf[:k], self._buf[k:]
             self.t += self.dt
             yield StreamTick(self.t, out)
+
+    # ---- checkpoint surface (repro.resilience) -----------------------
+    def state(self) -> dict:
+        return {"t": self.t, "offset": self._offset,
+                "buf": [dict(r) for r in self._buf], "acc": self._acc}
+
+    def restore_state(self, s: dict) -> None:
+        self.t = float(s["t"])
+        self._offset = int(s["offset"])
+        self._buf = list(s["buf"])
+        self._acc = float(s["acc"])

@@ -398,6 +398,14 @@ class SnapshotMaintainer:
         else:
             self._pending.append(delta)
 
+    def reset(self) -> None:
+        """Drop cached/pending state so the next `snapshot()` is a full
+        rebuild — how checkpoint restore (repro.resilience) re-anchors
+        the view on the restored store without serialising the CSR."""
+        self._snap = None
+        self._pending = []
+        self._force_rebuild = True
+
     def snapshot(self, store: GraphStore) -> GraphSnapshot:
         tel = self.telemetry
         pending, self._pending = self._pending, []

@@ -111,6 +111,14 @@ class SketchStage(_SketchQueries):
         self.ticks_seen += 1
         return records
 
+    # ---- checkpoint surface (repro.resilience); the sketch itself
+    # snapshots as array leaves, not here ----
+    def state(self) -> dict:
+        return {"ticks_seen": self.ticks_seen}
+
+    def restore_state(self, s: dict) -> None:
+        self.ticks_seen = int(s["ticks_seen"])
+
 
 class QuerySink(_SketchQueries):
     """Sink wrapper: commit-consistent sketch + live `"sketch"` events
@@ -207,6 +215,24 @@ class QuerySink(_SketchQueries):
         if not self._hooked and out.get("committed", False):
             self._absorb(et, out.get("stats"))
         return out
+
+    # ---- checkpoint surface (repro.resilience) ----
+    def state(self) -> Dict:
+        s: Dict = {"commits": self.commits}
+        if hasattr(self.inner, "state"):
+            s["inner"] = self.inner.state()
+        return s
+
+    def restore_state(self, s: Dict) -> None:
+        self.commits = int(s["commits"])
+        self._now = None
+        if self.maintainer is not None:
+            # cheaper than checkpointing the CSR: force one full rebuild
+            # (apply_delta is bit-exact vs build_snapshot, so the views
+            # converge identically)
+            self.maintainer.reset()
+        if "inner" in s and hasattr(self.inner, "restore_state"):
+            self.inner.restore_state(s["inner"])
 
     # ---- passthrough of the wrapped sink's surface ----
     def retry_archive(self, now: Optional[float] = None) -> int:

@@ -1,0 +1,36 @@
+"""repro.resilience — checkpoint/resume, fault injection, commit retry.
+
+Three pieces, composable through `PipelineBuilder` and `run_scenario`:
+
+  * `PipelineCheckpointer` — step-atomic `_COMMITTED`-manifest
+    snapshots of the FULL ingest state (store pytree, sketches,
+    pattern dictionary, controller + spill contents, ingestor
+    pool/archive, source cursor, loop scalars), background writes,
+    keep-N GC; `run_scenario(..., resume=True)` replays bit-exactly.
+  * `FaultPlan` / `FaultInjector` — counter-deterministic commit
+    failures, latency spikes and crash-at-tick kills through
+    `GraphIngestor.fail_hook`; `PipelineKilled` is the kill signal.
+  * `RetryPolicy` — capped exponential backoff + deterministic jitter
+    governing `retry_archive` and the ingestor's degraded mode.
+
+CLI: ``python -m repro.launch.chaos`` (kill mid-flash_crowd, resume,
+verify store/snapshot/accounting invariants).  See docs/API.md
+"Resilience & fault tolerance".
+"""
+from repro.resilience.checkpoint import (
+    PipelineCheckpointer,
+    drive,
+    pytree_digest,
+)
+from repro.resilience.faults import FaultInjector, FaultPlan, PipelineKilled
+from repro.resilience.retry import RetryPolicy
+
+__all__ = [
+    "FaultInjector",
+    "FaultPlan",
+    "PipelineCheckpointer",
+    "PipelineKilled",
+    "RetryPolicy",
+    "drive",
+    "pytree_digest",
+]

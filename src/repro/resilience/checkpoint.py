@@ -1,0 +1,299 @@
+"""`PipelineCheckpointer` — step-atomic snapshots of the full ingest state.
+
+Layout (the `train/checkpoint.py` idiom, extended with a host blob):
+
+  <dir>/step_<N>/
+    manifest.json        # step, array-leaf index, shapes/dtypes, extra
+    <component>.<leaf>.npy   # one file per device-array leaf
+    host.pkl             # everything else: buffers, cursors, counters
+    _COMMITTED           # written last: restore ignores torn checkpoints
+
+Array components are the pipeline's device pytrees — the `GraphStore`,
+the commit-consistent `GraphSketch`es, the `PatternDictionary` — saved
+unsharded one `.npy` per leaf.  The host blob carries the rest through
+each component's `state()`/`restore_state()` pair: the record buffer +
+controller (PerfMon RLS models, spill-file CONTENTS), the consumer
+backlog, the MetricsHub trace/counters, the ingestor pool/archive (and
+archive spill contents), the source cursor, and the loop scalars.
+Because every downstream value is counter-deterministic, restoring all
+of it makes a resumed `run_scenario` bit-exact vs an uninterrupted run.
+
+A background thread does the writes (capture is synchronous, so the
+snapshot is consistent); `wait()` joins before the next save.  Keep-N
+GC and `_COMMITTED`-gated discovery follow `train/checkpoint.py`.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import shutil
+import threading
+import time
+from typing import Any, Dict, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.resilience.faults import FaultPlan, PipelineKilled
+from repro.telemetry.spans import NULL_REGISTRY
+
+
+def _leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _array_components(pipe) -> Dict[str, Any]:
+    """Name -> device-pytree map of everything that snapshots as .npy
+    leaves.  Mirrors the builder's wiring: the sink chain's store and
+    sketch, plus any sketch/dictionary record stages."""
+    out: Dict[str, Any] = {}
+    sink = pipe.sink
+    ingestor = getattr(sink, "ingestor", None)
+    if ingestor is not None:
+        out["store"] = ingestor.store
+    sketch = getattr(sink, "sketch", None)
+    if sketch is not None:
+        out["sink_sketch"] = sketch
+    for i, st in enumerate(getattr(pipe, "stages", ())):
+        if hasattr(st, "sketch"):
+            out[f"stage{i}_sketch"] = st.sketch
+        if getattr(st, "dct", None) is not None:
+            out[f"stage{i}_dict"] = st.dct
+    return out
+
+
+def _component_templates(pipe, saved_keys: Iterable[str]) -> Dict[str, Any]:
+    """Like `_array_components`, but also materialises templates for
+    components a FRESH pipeline builds lazily — the pattern dictionary
+    is created on first rewrite, so a just-built resume pipeline has
+    `dct=None` even though the checkpoint holds one."""
+    comp = _array_components(pipe)
+    for i, st in enumerate(getattr(pipe, "stages", ())):
+        name = f"stage{i}_dict"
+        if (name not in comp and hasattr(st, "capacity")
+                and any(k.startswith(name + ".") for k in saved_keys)):
+            from repro.compress.dictionary import init_dictionary
+
+            comp[name] = init_dictionary(st.capacity)
+    return comp
+
+
+def _assign_components(pipe, restored: Dict[str, Any]) -> None:
+    sink = pipe.sink
+    ingestor = getattr(sink, "ingestor", None)
+    if "store" in restored and ingestor is not None:
+        ingestor.store = restored["store"]
+    if "sink_sketch" in restored:
+        sink.sketch = restored["sink_sketch"]
+    for i, st in enumerate(getattr(pipe, "stages", ())):
+        if f"stage{i}_sketch" in restored:
+            st.sketch = restored[f"stage{i}_sketch"]
+        if f"stage{i}_dict" in restored:
+            st.dct = restored[f"stage{i}_dict"]
+
+
+def pytree_digest(tree) -> str:
+    """sha256 over every leaf's dtype/shape/bytes — the byte-identity
+    witness the chaos harness compares between runs."""
+    import hashlib
+
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+class PipelineCheckpointer:
+    """Periodic step-atomic pipeline snapshots (module docstring)."""
+
+    def __init__(self, directory: str, keep: int = 3, every: int = 16,
+                 telemetry=None):
+        if every < 1:
+            raise ValueError("checkpoint cadence `every` must be >= 1")
+        self.dir = directory
+        self.keep = keep
+        self.every = every
+        self.telemetry = telemetry or NULL_REGISTRY
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.saves = 0
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, pipe, source=None, blocking: bool = False,
+             extra: Optional[Dict] = None) -> None:
+        """Capture synchronously (consistent cut), write in background."""
+        self.wait()
+        tel = self.telemetry
+        with tel.span("checkpoint.capture"):
+            host_arrays = []
+            for name, tree in _array_components(pipe).items():
+                for p, v in jax.tree_util.tree_flatten_with_path(tree)[0]:
+                    host_arrays.append((
+                        f"{name}.{_leaf_key(p)}",
+                        np.asarray(jax.device_get(v)),
+                    ))
+            host_state: Dict[str, Any] = {"pipe": pipe.state()}
+            if source is not None and hasattr(source, "state"):
+                host_state["source"] = source.state()
+            blob = pickle.dumps(host_state, protocol=pickle.HIGHEST_PROTOCOL)
+        manifest_extra = dict(extra or {})
+
+        def write():
+            t0 = time.perf_counter()
+            d = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = d + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            manifest = {"step": step, "leaves": [], "extra": manifest_extra,
+                        "host": "host.pkl"}
+            for key, arr in host_arrays:
+                fn = key.replace("/", "_") + ".npy"
+                np.save(os.path.join(tmp, fn), arr)
+                manifest["leaves"].append(
+                    {"key": key, "file": fn, "shape": list(arr.shape),
+                     "dtype": str(arr.dtype)})
+            with open(os.path.join(tmp, "host.pkl"), "wb") as f:
+                f.write(blob)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+                f.write("ok")
+            if os.path.exists(d):
+                shutil.rmtree(d)
+            os.rename(tmp, d)
+            self._gc()
+            tel.observe("checkpoint.write", time.perf_counter() - t0)
+
+        self.saves += 1
+        tel.count("checkpoint.saved")
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        for s in self.list_steps()[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, d, "_COMMITTED")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def restore(self, pipe, source=None, step: Optional[int] = None,
+                expect: Optional[Dict] = None) -> Dict:
+        """Load the checkpoint into a freshly BUILT pipeline + source
+        (same builder configuration as the saved run) and return the
+        manifest.  `expect` entries are checked against the manifest's
+        `extra` — a scenario/seed/shard mismatch is a hard error, not a
+        silently wrong resume."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        if expect:
+            got = manifest.get("extra", {})
+            bad = {k: (got.get(k), v) for k, v in expect.items()
+                   if got.get(k) != v}
+            if bad:
+                raise ValueError(
+                    f"checkpoint mismatch in {d}: "
+                    + ", ".join(f"{k}: saved={s!r} expected={e!r}"
+                                for k, (s, e) in bad.items()))
+        tel = self.telemetry
+        with tel.span("checkpoint.restore"):
+            files = {l["key"]: l["file"] for l in manifest["leaves"]}
+            comp = _component_templates(pipe, files.keys())
+            restored: Dict[str, Any] = {}
+            consumed = set()
+            for name, tree in comp.items():
+                paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+                leaves = []
+                for p, _ in paths:
+                    key = f"{name}.{_leaf_key(p)}"
+                    if key not in files:
+                        raise KeyError(
+                            f"checkpoint {d} lacks leaf {key}: the resume "
+                            f"pipeline is configured differently from the "
+                            f"saved one")
+                    leaves.append(jnp.asarray(
+                        np.load(os.path.join(d, files[key]))))
+                    consumed.add(key)
+                restored[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+            orphans = set(files) - consumed
+            if orphans:
+                raise KeyError(
+                    f"checkpoint {d} holds components the resume pipeline "
+                    f"does not: {sorted(orphans)[:4]}...")
+            _assign_components(pipe, restored)
+            with open(os.path.join(d, manifest.get("host", "host.pkl")),
+                      "rb") as f:
+                host = pickle.load(f)
+            pipe.restore_state(host["pipe"])
+            if source is not None and "source" in host \
+                    and hasattr(source, "restore_state"):
+                source.restore_state(host["source"])
+        return manifest
+
+
+# ---------------------------------------------------------------------------
+# tick driver: checkpoint cadence + crash-at-tick, wrapped around a source
+# ---------------------------------------------------------------------------
+def drive(source_ticks: Iterable, pipe, source=None,
+          checkpointer: Optional[PipelineCheckpointer] = None,
+          fault_plan: Optional[FaultPlan] = None, start_tick: int = 0,
+          extra: Optional[Dict] = None) -> Iterator:
+    """Wrap a tick iterator with periodic checkpoints and the plan's
+    crash-at-tick kill.
+
+    The post-yield code runs after the pipeline has FULLY processed the
+    yielded tick and before the next one is pulled from the source, so
+    a checkpoint's cursor is exact: resume replays from the next tick,
+    never re-ingesting or skipping one.  `crash_at_tick` raises
+    `PipelineKilled` after the kill tick is processed (a checkpoint due
+    at the same tick is written first, durably).
+    """
+    crash_at = fault_plan.crash_at_tick if fault_plan is not None else None
+    tick_no = start_tick
+    for tick in source_ticks:
+        yield tick
+        tick_no += 1
+        if checkpointer is not None and tick_no % checkpointer.every == 0:
+            hub = getattr(pipe, "metrics", None)
+            if hub is not None:
+                hub.emit("checkpoint", float(tick_no), step=tick_no)
+            checkpointer.save(tick_no, pipe, source, extra=extra)
+        if crash_at is not None and tick_no >= crash_at:
+            if checkpointer is not None:
+                checkpointer.wait()
+            raise PipelineKilled(tick_no)

@@ -58,6 +58,17 @@ class WorkloadReport:
     pattern_refs: int = 0        # total (pattern_id, bindings) references
     dict_hit_rate: float = 0.0   # dictionary hit rate over the whole run
     commit_ms_mean: float = 0.0  # mean successful-commit latency (ms)
+    # resilience path (repro.resilience; inert defaults when off)
+    commit_failures: int = 0     # failed commit attempts (injected or real)
+    retries_replayed: int = 0    # archived batches successfully re-committed
+    archived_total: int = 0      # batches ever archived (no-batch-lost LHS)
+    archive_remaining: int = 0   # batches still awaiting replay at run end
+    pool_overflows: int = 0      # pool-cap diversions to the archive
+    degraded_events: int = 0     # ticks served in degraded (store-down) mode
+    checkpoints_saved: int = 0
+    resumed_from_tick: int = -1  # -1 = fresh run (not resumed)
+    store_digest: str = ""       # pytree sha256 of the final GraphStore
+    snapshot_digest: str = ""    # pytree sha256 of build_snapshot(store)
     # telemetry (repro.telemetry; empty when the registry is off)
     telemetry_enabled: bool = False
     # per-stage latency breakdown, aggregated across shards:
@@ -141,6 +152,12 @@ def run_scenario(
     telemetry=None,
     trace: Optional[str] = None,
     trace_jsonl: Optional[str] = None,
+    fault_plan=None,
+    retry=None,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 16,
+    checkpoint_keep: int = 3,
+    resume: bool = False,
 ) -> WorkloadReport:
     """Drive a pipeline through `scenario` and report (module docstring).
 
@@ -156,6 +173,16 @@ def run_scenario(
     after the run and `trace_jsonl` the flat JSONL sink — either
     implies telemetry.  With telemetry on the report carries the
     per-stage p50/p95/p99 latency breakdown (`stage_latency_ms`).
+
+    Resilience (repro.resilience): `fault_plan` injects commit faults
+    (and, via `crash_at_tick`, raises `PipelineKilled` mid-run);
+    setting it arms a default `RetryPolicy` unless `retry` overrides
+    (pass a policy to customise, `False` to disable).  `checkpoint_dir`
+    turns on periodic step-atomic checkpoints every `checkpoint_every`
+    ticks; `resume=True` restores the latest one (same scenario/seed/
+    shards enforced) and runs only the remaining ticks — bit-exact vs
+    an uninterrupted run.  With any of these active the report carries
+    the retry/archive accounting and the store/snapshot digests.
     """
     scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
     ticks = int(ticks if ticks is not None else scn.ticks)
@@ -191,10 +218,11 @@ def run_scenario(
         reg = telemetry if isinstance(telemetry, TelemetryRegistry) \
             else TelemetryRegistry()
 
+    sdir = spill_dir or f"/tmp/repro_workload_{scn.name}_{seed}"
     b = (PipelineBuilder(cfg)
          .with_source(src)
          .simulated_consumer(speed=speed)
-         .spill_dir(spill_dir or f"/tmp/repro_workload_{scn.name}_{seed}")
+         .spill_dir(sdir)
          .on_event(_count_drops))
     if reg is not None:
         b = b.with_telemetry(reg)
@@ -202,12 +230,47 @@ def run_scenario(
         b = b.sketch_guided()
     if dict_compress:
         b = b.with_compression(capacity=dict_capacity)
+    if fault_plan is not None:
+        b = b.with_faults(fault_plan)
+    if retry is not False and (retry is not None or fault_plan is not None):
+        # a fault plan arms the default policy unless retry=False
+        b = b.with_retry(retry if retry not in (None, True) else None,
+                         archive_dir=f"{sdir}_archive")
     if shards > 1:
         b = b.sharded(shards)
     if on_event is not None:
         b = b.on_event(on_event)
     pipe = b.build()
-    rep = pipe.run(max_ticks=ticks)
+
+    resilient = (fault_plan is not None or checkpoint_dir is not None
+                 or (retry is not None and retry is not False))
+    ckpt = None
+    ckpt_extra = {"scenario": scn.name, "seed": seed, "shards": shards}
+    if checkpoint_dir is not None:
+        from repro.resilience import PipelineCheckpointer
+
+        ckpt = PipelineCheckpointer(checkpoint_dir, keep=checkpoint_keep,
+                                    every=checkpoint_every, telemetry=reg)
+    start_tick = 0
+    if resume:
+        if ckpt is None:
+            raise ValueError("resume=True needs checkpoint_dir")
+        manifest = ckpt.restore(pipe, src, expect=ckpt_extra)
+        start_tick = int(manifest["step"])
+
+    if ckpt is not None or fault_plan is not None:
+        from repro.resilience import drive
+
+        stream = drive(src.ticks(), pipe, src, checkpointer=ckpt,
+                       fault_plan=fault_plan, start_tick=start_tick,
+                       extra=ckpt_extra)
+        try:
+            rep = pipe.run(stream, max_ticks=max(ticks - start_tick, 0))
+        finally:
+            if ckpt is not None:
+                ckpt.wait()
+    else:
+        rep = pipe.run(max_ticks=ticks)
 
     if shards > 1:
         sub = rep.shards
@@ -235,6 +298,13 @@ def run_scenario(
     ingestor = getattr(pipe.sink, "ingestor", None)
     commit_ms = [1e3 * c.busy_s for c in ingestor.commits if c.ok] \
         if ingestor is not None else []
+    store_digest = snapshot_digest = ""
+    if resilient:
+        from repro.query.snapshot import build_snapshot
+        from repro.resilience import pytree_digest
+
+        store_digest = pytree_digest(store)
+        snapshot_digest = pytree_digest(build_snapshot(store))
     stage_latency: Dict[str, Dict[str, float]] = {}
     n_audit = 0
     if reg is not None:
@@ -277,6 +347,17 @@ def run_scenario(
         pattern_refs=refs[0],
         dict_hit_rate=hits[0] / max(hits[1], 1),
         commit_ms_mean=float(np.mean(commit_ms)) if commit_ms else 0.0,
+        commit_failures=sum(1 for c in ingestor.commits if not c.ok)
+        if ingestor is not None else 0,
+        retries_replayed=getattr(ingestor, "replayed", 0) or 0,
+        archived_total=getattr(ingestor, "archived_total", 0) or 0,
+        archive_remaining=getattr(ingestor, "archive_depth", 0) or 0,
+        pool_overflows=getattr(ingestor, "pool_overflows", 0) or 0,
+        degraded_events=int(pipe.metrics.counters["degraded"]),
+        checkpoints_saved=ckpt.saves if ckpt is not None else 0,
+        resumed_from_tick=start_tick if resume else -1,
+        store_digest=store_digest,
+        snapshot_digest=snapshot_digest,
         telemetry_enabled=reg is not None,
         stage_latency_ms=stage_latency,
         audit_decisions=n_audit,

@@ -56,6 +56,12 @@ class ScenarioSource:
         self._rec_no = 0     # record counter: ids AND PRNG lane base
         self._excite = 0.0   # Hawkes carry across trajectory chunks
         self._recent: collections.deque = collections.deque(maxlen=recent_window)
+        # (rate, count) pairs of the current trajectory chunk not yet
+        # yielded.  Kept on the instance (not generator-internal) so a
+        # checkpoint (repro.resilience) can capture the cursor mid-chunk
+        # — `_tick_no`/`_excite` advance a whole CHUNK at a time, so
+        # without this a resumed source would skip the chunk remainder.
+        self._pending: List[tuple] = []
 
     # ------------------------------------------------------------------
     def _sample_ids(self, n: int, burst_level: float):
@@ -103,19 +109,44 @@ class ScenarioSource:
         scn = self.scenario
         base = scn.base_rate * self.rate_scale
         while True:
-            chunk = rate_trajectory(
-                np.uint32(self.seed), CHUNK, self._tick_no, self._excite,
-                base, scn.noise_frac, scn.hawkes_alpha, scn.hawkes_beta,
-                scn.diurnal_amp, scn.diurnal_period, scn.flash_t,
-                scn.flash_mult, scn.flash_decay, scn.rate_cap_mult * base,
-                dt=self.dt)
-            rates = np.asarray(chunk.rates)
-            counts = np.asarray(chunk.counts)
-            self._excite = float(chunk.excite)
-            self._tick_no += CHUNK
-            for lam, c in zip(rates, counts):
-                # burst level in [0,1): 0 at baseline, ->1 as lam >> base;
-                # drives the hot-topic share (diversity drops in bursts)
-                b = max(0.0, 1.0 - base / max(float(lam), base))
-                self.t += self.dt
-                yield StreamTick(self.t, self._materialise(int(c), b))
+            if not self._pending:
+                chunk = rate_trajectory(
+                    np.uint32(self.seed), CHUNK, self._tick_no, self._excite,
+                    base, scn.noise_frac, scn.hawkes_alpha, scn.hawkes_beta,
+                    scn.diurnal_amp, scn.diurnal_period, scn.flash_t,
+                    scn.flash_mult, scn.flash_decay, scn.rate_cap_mult * base,
+                    dt=self.dt)
+                rates = np.asarray(chunk.rates)
+                counts = np.asarray(chunk.counts)
+                self._excite = float(chunk.excite)
+                self._tick_no += CHUNK
+                self._pending = [(float(lam), int(c))
+                                 for lam, c in zip(rates, counts)]
+            lam, c = self._pending.pop(0)
+            # burst level in [0,1): 0 at baseline, ->1 as lam >> base;
+            # drives the hot-topic share (diversity drops in bursts)
+            b = max(0.0, 1.0 - base / max(lam, base))
+            self.t += self.dt
+            yield StreamTick(self.t, self._materialise(c, b))
+
+    # ---- checkpoint surface (repro.resilience) -----------------------
+    def state(self) -> dict:
+        """Exact stream cursor: counters, Hawkes carry, the un-yielded
+        chunk remainder, and the duplicate-sampling window."""
+        return {
+            "t": self.t,
+            "tick_no": self._tick_no,
+            "rec_no": self._rec_no,
+            "excite": self._excite,
+            "pending": list(self._pending),
+            "recent": [dict(r) for r in self._recent],
+        }
+
+    def restore_state(self, s: dict) -> None:
+        self.t = float(s["t"])
+        self._tick_no = int(s["tick_no"])
+        self._rec_no = int(s["rec_no"])
+        self._excite = float(s["excite"])
+        self._pending = [tuple(p) for p in s["pending"]]
+        self._recent = collections.deque(s["recent"],
+                                         maxlen=self._recent.maxlen)

@@ -200,3 +200,41 @@ def test_tokenizer_deterministic_and_in_range(text):
     b = tok.encode(text)
     assert a == b
     assert all(0 <= t < 1024 for t in a)
+
+
+# ---------------------------------------------------------------------------
+# retry backoff invariants (repro.resilience)
+# ---------------------------------------------------------------------------
+
+
+@settings(**_settings)
+@given(
+    base_s=st.floats(min_value=1e-3, max_value=10.0),
+    factor=st.floats(min_value=1.0, max_value=8.0),
+    cap_mult=st.floats(min_value=1.0, max_value=100.0),
+    jitter=st.floats(min_value=0.0, max_value=0.99),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_retry_backoff_property(base_s, factor, cap_mult, jitter, seed):
+    """Capped, monotone (until the cap), jitter-bounded, deterministic:
+    the RetryPolicy contract for every parameterisation it accepts."""
+    from repro.resilience import RetryPolicy
+
+    p = RetryPolicy(base_s=base_s, factor=factor, cap_s=base_s * cap_mult,
+                    jitter=jitter, seed=seed)
+    raws = [p.raw_delay(k) for k in range(24)]
+    # monotone non-decreasing and capped (incl. huge attempt counts)
+    assert all(b >= a for a, b in zip(raws, raws[1:]))
+    assert all(r <= p.cap_s for r in raws)
+    # the schedule saturates: at the cap when it grows, flat otherwise
+    assert p.raw_delay(10**9) == (p.cap_s if factor > 1.0
+                                  else min(base_s, p.cap_s))
+    for k in range(24):
+        d = p.delay(k)
+        # jitter stays a +/- fraction of the raw schedule...
+        assert raws[k] * (1 - jitter) - 1e-12 <= d
+        assert d <= raws[k] * (1 + jitter) + 1e-12
+        # ...and is a pure function of (policy params, attempt)
+        assert d == RetryPolicy(base_s=base_s, factor=factor,
+                                cap_s=base_s * cap_mult, jitter=jitter,
+                                seed=seed).delay(k)

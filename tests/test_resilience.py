@@ -1,0 +1,397 @@
+"""repro.resilience: backoff policy, fault injection, bounded archive,
+checkpoint/restore, and the kill/resume bit-exactness contract.
+
+The e2e chaos tests mirror `python -m repro.launch.chaos`: a run killed
+mid-scenario and resumed from its latest checkpoint must land on a
+byte-identical GraphStore and CSR snapshot vs the same run left alone —
+everything downstream of (scenario, seed) is counter-deterministic,
+including the injected failure schedule."""
+import math
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.edge_table import from_raw_batch
+from repro.core.ingestor import GraphIngestor
+from repro.core.transform import create_edges, tweet_mapping
+from repro.graphstore.store import init_store
+from repro.resilience import (
+    FaultInjector,
+    FaultPlan,
+    PipelineCheckpointer,
+    PipelineKilled,
+    RetryPolicy,
+    pytree_digest,
+)
+from repro.workloads import run_scenario
+
+
+def _et(tag: str, n: int = 5):
+    recs = [{"id": f"{tag}{i}", "user": f"u{tag}{i}", "hashtags": ["x"],
+             "mentions": []} for i in range(n)]
+    return from_raw_batch(create_edges(recs, tweet_mapping()), 64)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_capped_and_monotone():
+    p = RetryPolicy(base_s=0.5, factor=2.0, cap_s=30.0, jitter=0.0)
+    raws = [p.raw_delay(k) for k in range(20)]
+    assert raws[0] == 0.5 and raws[1] == 1.0 and raws[2] == 2.0
+    assert all(b >= a for a, b in zip(raws, raws[1:]))  # monotone
+    assert raws[-1] == 30.0  # capped
+    assert p.raw_delay(10_000) == 30.0  # no float overflow
+
+
+def test_retry_policy_jitter_bounded_and_deterministic():
+    p = RetryPolicy(jitter=0.1, seed=7)
+    for k in range(12):
+        raw = p.raw_delay(k)
+        d = p.delay(k)
+        assert raw * 0.9 <= d <= raw * 1.1
+        assert d == RetryPolicy(jitter=0.1, seed=7).delay(k)  # pure
+    # different seeds decorrelate the jitter stream
+    assert any(RetryPolicy(seed=1).delay(k) != RetryPolicy(seed=2).delay(k)
+               for k in range(8))
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(base_s=0.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(cap_s=0.1, base_s=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy().raw_delay(-1)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_windows_and_state():
+    inj = FaultInjector(FaultPlan(fail_attempts=((2, 4),),
+                                  fail_times=((10.0, 12.0),)))
+    assert inj.wants_now
+    hits = [inj(now=0.0) for _ in range(5)]
+    assert hits == [False, False, True, True, False]
+    assert inj(now=11.0) is True  # inside the outage window
+    assert inj(now=12.0) is False  # half-open
+    s = inj.state()
+    inj2 = FaultInjector(inj.plan)
+    inj2.restore_state(s)
+    assert inj2.attempts == inj.attempts  # sequence continues exactly
+
+
+def test_fault_plan_without_crash():
+    p = FaultPlan(fail_attempts=((0, 1),), crash_at_tick=9)
+    q = p.without_crash()
+    assert q.crash_at_tick is None and q.fail_attempts == p.fail_attempts
+
+
+# ---------------------------------------------------------------------------
+# GraphIngestor resilience paths
+# ---------------------------------------------------------------------------
+
+def test_commit_record_keeps_simulated_zero_time():
+    """now=0.0 is falsy: the failure record must still carry t=0.0
+    (the old `now or time.time()` stamped it with wall clock)."""
+    ing = GraphIngestor(init_store(512, 1024), fail_hook=lambda: True)
+    out = ing.push(_et("a"), now=0.0)
+    assert not out["committed"]
+    assert ing.commits[-1].t == 0.0
+
+
+def test_pool_hard_cap_diverts_to_archive():
+    ing = GraphIngestor(init_store(512, 1024), max_pool_size=2, pool_cap=3)
+    for tag in "abc":
+        ing.pool.append(_et(tag))
+    out = ing.push(_et("d"))
+    assert out == {"committed": False, "pooled": 3, "pool_overflow": 1}
+    assert ing.pool_overflows == 1
+    assert ing.archive_depth == 1 and ing.archived_total == 1
+    assert len(ing.pool) == 3  # pool did not grow past the cap
+
+
+def test_backoff_gate_blocks_then_allows_retry():
+    state = {"down": True}
+    ing = GraphIngestor(init_store(512, 1024),
+                        fail_hook=lambda: state["down"],
+                        retry_policy=RetryPolicy(jitter=0.0))
+    out = ing.push(_et("a"), now=0.0)
+    assert not out["committed"] and out["retry_in_s"] == 0.5
+    assert ing.next_retry_t == 0.5
+    assert ing.retry_archive(now=0.4) == 0  # gate closed: no attempt
+    assert ing.retry_archive(now=0.4) == 0  # ...and it stays cheap
+    state["down"] = False
+    assert ing.retry_archive(now=0.6) == 1  # gate open: replayed
+    assert ing.archive_depth == 0 and ing.replayed == 1
+
+
+def test_backoff_delay_doubles_per_consecutive_failure():
+    ing = GraphIngestor(init_store(512, 1024), fail_hook=lambda: True,
+                        retry_policy=RetryPolicy(jitter=0.0), degrade_after=99)
+    delays = []
+    t = 0.0
+    for _ in range(5):
+        t = ing.next_retry_t if ing.next_retry_t > t else t
+        out = ing.push(_et("x"), now=t)
+        delays.append(out["retry_in_s"])
+    assert delays == [0.5, 1.0, 2.0, 4.0, 8.0]
+
+
+def test_degraded_mode_archives_without_probing():
+    ing = GraphIngestor(init_store(512, 1024), fail_hook=lambda: True,
+                        retry_policy=RetryPolicy(jitter=0.0), degrade_after=2)
+    ing.push(_et("a"), now=0.0)
+    ing.push(_et("b"), now=1.0)
+    assert ing.degraded
+    n_attempts = ing.attempts
+    out = ing.push(_et("c"), now=1.1)  # gate closed: no commit attempt
+    assert out == {"committed": False, "archived": 3, "degraded": True}
+    assert ing.attempts == n_attempts
+    assert ing.archived_total == 3
+
+
+def test_archive_spills_to_disk_and_replays_fifo(tmp_path):
+    """Past max_archive the archive spills to disk; replay preserves
+    FIFO order across the memory/disk boundary and the accounting
+    invariant archived_total == replayed + archive_depth holds."""
+    state = {"down": True}
+    ing = GraphIngestor(init_store(2048, 4096),
+                        fail_hook=lambda: state["down"],
+                        retry_policy=RetryPolicy(jitter=0.0),
+                        max_archive=2, archive_dir=str(tmp_path / "arch"),
+                        degrade_after=1)
+    for i in range(5):
+        # gate always open at these times -> every push probes + fails
+        ing.push(_et(f"t{i}"), now=100.0 * i)
+    assert len(ing.archive) <= 2 and ing.archive_depth == 5
+    assert len(ing._archive_spill) == 3
+    assert ing.archived_total == ing.replayed + ing.archive_depth
+    state["down"] = False
+    assert ing.retry_archive(now=1e9) == 5
+    assert ing.archive_depth == 0 and ing._archive_spill == []
+    assert ing.archived_total == ing.replayed + ing.archive_depth
+    # FIFO: first-archived batch committed first
+    assert [c.ok for c in ing.commits].count(True) == 5
+
+
+def test_legacy_no_policy_behavior_unchanged():
+    """No RetryPolicy: no gate, no degraded mode — retry_archive always
+    probes (pinned by test_ingestor_pool; re-pinned here)."""
+    state = {"down": True}
+    ing = GraphIngestor(init_store(512, 1024),
+                        fail_hook=lambda: state["down"])
+    ing.push(_et("a"), now=0.0)
+    assert not ing.degraded
+    state["down"] = False
+    assert ing.retry_archive() == 1  # no gate to wait out
+
+
+def test_ingestor_state_roundtrip(tmp_path):
+    state = {"down": True}
+    ing = GraphIngestor(init_store(2048, 4096),
+                        fail_hook=lambda: state["down"],
+                        retry_policy=RetryPolicy(jitter=0.0),
+                        max_archive=1, archive_dir=str(tmp_path / "a"),
+                        degrade_after=1)
+    for i in range(3):
+        ing.push(_et(f"t{i}"), now=100.0 * i)
+    snap = pickle.loads(pickle.dumps(ing.state()))
+    ing2 = GraphIngestor(ing.store, fail_hook=lambda: state["down"],
+                         retry_policy=RetryPolicy(jitter=0.0),
+                         max_archive=1, archive_dir=str(tmp_path / "b"),
+                         degrade_after=1)
+    ing2.restore_state(snap)
+    assert ing2.archive_depth == ing.archive_depth
+    assert ing2.archived_total == ing.archived_total
+    assert ing2.next_retry_t == ing.next_retry_t
+    assert ing2.consecutive_failures == ing.consecutive_failures
+    state["down"] = False  # connection restored: replay everything
+    assert ing2.retry_archive(now=1e9) == 3
+    assert ing2.archived_total == ing2.replayed + ing2.archive_depth
+
+
+# ---------------------------------------------------------------------------
+# PipelineCheckpointer
+# ---------------------------------------------------------------------------
+
+def _tiny_pipe(tmp_path, tag="a"):
+    from repro.api import PipelineBuilder
+    from repro.configs.paper_ingest import IngestConfig
+    from repro.workloads.source import ScenarioSource
+
+    src = ScenarioSource("steady_state", seed=5)
+    pipe = (PipelineBuilder(IngestConfig(store_nodes=1 << 11,
+                                         store_edges=1 << 12))
+            .with_source(src)
+            .simulated_consumer(speed=1.0)
+            .spill_dir(str(tmp_path / f"spill_{tag}"))
+            .build())
+    return pipe, src
+
+
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    pipe, src = _tiny_pipe(tmp_path, "save")
+    pipe.run(max_ticks=12)
+    ck = PipelineCheckpointer(str(tmp_path / "ck"), every=4)
+    ck.save(12, pipe, src, blocking=True, extra={"seed": 5})
+    assert ck.list_steps() == [12]
+
+    pipe2, src2 = _tiny_pipe(tmp_path, "load")
+    man = ck.restore(pipe2, src2, expect={"seed": 5})
+    assert man["step"] == 12
+    assert pytree_digest(pipe2.store) == pytree_digest(pipe.store)
+    assert src2.state() == src.state()
+    assert pipe2.loop_state["records"] == pipe.loop_state["records"]
+    # both continue identically
+    pipe.run(max_ticks=6)
+    pipe2.run(max_ticks=6)
+    assert pytree_digest(pipe2.store) == pytree_digest(pipe.store)
+
+
+def test_checkpoint_expect_mismatch_is_hard_error(tmp_path):
+    pipe, src = _tiny_pipe(tmp_path, "exp")
+    pipe.run(max_ticks=4)
+    ck = PipelineCheckpointer(str(tmp_path / "ck"))
+    ck.save(4, pipe, src, blocking=True, extra={"seed": 5})
+    pipe2, src2 = _tiny_pipe(tmp_path, "exp2")
+    with pytest.raises(ValueError, match="mismatch"):
+        ck.restore(pipe2, src2, expect={"seed": 6})
+
+
+def test_torn_checkpoint_ignored_and_gc_keeps_n(tmp_path):
+    pipe, src = _tiny_pipe(tmp_path, "gc")
+    pipe.run(max_ticks=4)
+    ck = PipelineCheckpointer(str(tmp_path / "ck"), keep=2)
+    for step in (4, 8, 12, 16):
+        ck.save(step, pipe, src, blocking=True)
+    assert ck.list_steps() == [12, 16]  # keep-N GC
+    # a torn checkpoint (no _COMMITTED) is invisible to discovery
+    os.remove(str(tmp_path / "ck" / "step_00000016" / "_COMMITTED"))
+    assert ck.list_steps() == [12]
+    assert ck.latest_step() == 12
+
+
+def test_restore_without_checkpoint_raises(tmp_path):
+    pipe, src = _tiny_pipe(tmp_path, "none")
+    ck = PipelineCheckpointer(str(tmp_path / "ck"))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(pipe, src)
+
+
+# ---------------------------------------------------------------------------
+# e2e: kill/resume bit-exactness + chaos invariants (the tentpole)
+# ---------------------------------------------------------------------------
+
+_CHAOS_KW = dict(ticks=40, seed=3, node_cap=1 << 12, edge_cap=1 << 14,
+                 retry=RetryPolicy(jitter=0.0), checkpoint_every=8)
+
+
+@pytest.mark.parametrize("scenario", ["flash_crowd", "celebrity_cascade"])
+def test_kill_resume_bit_exact(scenario, tmp_path):
+    """Kill mid-scenario, resume from the latest checkpoint: store AND
+    CSR snapshot digests match an uninterrupted run executing the same
+    fault schedule."""
+    plan = FaultPlan(fail_times=((10.0, 16.0),), crash_at_tick=20)
+
+    ref = run_scenario(scenario, fault_plan=plan.without_crash(),
+                       spill_dir=str(tmp_path / "ref"), **_CHAOS_KW)
+    assert ref.commit_failures > 0  # the outage actually bit
+
+    with pytest.raises(PipelineKilled):
+        run_scenario(scenario, fault_plan=plan,
+                     checkpoint_dir=str(tmp_path / "ck"),
+                     spill_dir=str(tmp_path / "chaos"), **_CHAOS_KW)
+
+    res = run_scenario(scenario, fault_plan=plan.without_crash(),
+                       checkpoint_dir=str(tmp_path / "ck"), resume=True,
+                       spill_dir=str(tmp_path / "chaos"), **_CHAOS_KW)
+    assert 0 < res.resumed_from_tick <= 20
+    assert res.total_records == ref.total_records
+    assert res.store_digest == ref.store_digest
+    assert res.snapshot_digest == ref.snapshot_digest
+    # no batch lost across kill/resume: archive accounting balances
+    assert res.archived_total == res.retries_replayed + res.archive_remaining
+
+
+def test_outage_backoff_does_not_hot_loop(tmp_path):
+    """During a store outage the commit-failure count stays logarithmic
+    in the outage length — the backoff gate holds (a gateless retry
+    fails about once per tick)."""
+    outage = 14.0
+    plan = FaultPlan(fail_times=((8.0, 8.0 + outage),))
+    rep = run_scenario("flash_crowd", fault_plan=plan,
+                       spill_dir=str(tmp_path / "sp"), **_CHAOS_KW)
+    assert rep.commit_failures > 0
+    allowed = 3 + 2 * (math.log2(outage / 0.5) + 2)
+    assert rep.commit_failures <= allowed
+    # service recovered: everything archived during the outage replayed
+    assert rep.retries_replayed > 0
+    assert rep.archive_remaining == 0
+    assert rep.archived_total == rep.retries_replayed
+    assert rep.degraded_events > 0  # degraded mode engaged mid-outage
+
+
+def test_faults_off_keeps_report_inert(tmp_path):
+    rep = run_scenario("steady_state", ticks=10, node_cap=1 << 10,
+                       edge_cap=1 << 11, spill_dir=str(tmp_path / "sp"))
+    assert rep.commit_failures == 0 and rep.retries_replayed == 0
+    assert rep.store_digest == "" and rep.snapshot_digest == ""
+    assert rep.resumed_from_tick == -1
+    assert "commit_failures" in rep.to_dict()  # JSON-safe
+
+
+def test_sharded_kill_resume_bit_exact(tmp_path):
+    """The contract holds across shards too: per-shard buffers,
+    controllers, and hub counters all ride in the checkpoint."""
+    kw = dict(_CHAOS_KW, shards=2, ticks=32)
+    plan = FaultPlan(fail_times=((8.0, 12.0),), crash_at_tick=16)
+    ref = run_scenario("flash_crowd", fault_plan=plan.without_crash(),
+                       spill_dir=str(tmp_path / "ref"), **kw)
+    with pytest.raises(PipelineKilled):
+        run_scenario("flash_crowd", fault_plan=plan,
+                     checkpoint_dir=str(tmp_path / "ck"),
+                     spill_dir=str(tmp_path / "chaos"), **kw)
+    res = run_scenario("flash_crowd", fault_plan=plan.without_crash(),
+                       checkpoint_dir=str(tmp_path / "ck"), resume=True,
+                       spill_dir=str(tmp_path / "chaos"), **kw)
+    assert res.store_digest == ref.store_digest
+    assert res.snapshot_digest == ref.snapshot_digest
+    assert res.total_records == ref.total_records
+
+
+def test_pool_overflow_surfaces_in_metrics_and_report(tmp_path):
+    """A wedged commit path (pool admits nothing) holds batches up to
+    the hard cap, then diverts to the archive — and the overflow
+    surfaces through the MetricsHub as a `pool_overflow` event."""
+    from repro.api import PipelineBuilder
+    from repro.configs.paper_ingest import IngestConfig
+    from repro.workloads.source import ScenarioSource
+
+    events = []
+    src = ScenarioSource("flash_crowd", seed=1)
+    pipe = (PipelineBuilder(IngestConfig(store_nodes=1 << 12,
+                                         store_edges=1 << 14))
+            .with_source(src)
+            .simulated_consumer(speed=0.5)
+            .spill_dir(str(tmp_path / "sp"))
+            .on_event(lambda ev: events.append(ev.kind))
+            .build())
+    ing = pipe.sink.ingestor
+    ing.max_pool_size = 0  # wedge the pool: nothing ever commits
+    ing.pool_cap = 2
+    pipe.run(max_ticks=20)
+    assert len(ing.pool) == 2  # held up to the hard cap, no further
+    assert ing.pool_overflows > 0
+    assert "pool_overflow" in events
+    assert ing.archived_total == ing.replayed + ing.archive_depth
+    assert ing.archived_total == ing.pool_overflows
