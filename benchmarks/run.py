@@ -25,7 +25,8 @@ import time
 # bench names whose results belong in the BENCH_ingest.json trajectory
 TRAJECTORY_BENCHES = ("ingest_trajectory", "store_ingest", "snapshot_build",
                       "workload_scenarios", "compress_dictionary",
-                      "telemetry_overhead", "resilience_chaos")
+                      "telemetry_overhead", "resilience_chaos",
+                      "monitor_overhead")
 
 BENCHES = [
     # (name, module, function, paper ref)
@@ -42,6 +43,7 @@ BENCHES = [
     ("workload_scenarios", "benchmarks.bench_workloads", "bench_scenarios", "scenario family (Alg 2 under adversarial streams)"),
     ("compress_dictionary", "benchmarks.bench_compress", "bench_compress_dictionary", "GraphZip dictionary compression (Fig 13 + refs)"),
     ("telemetry_overhead", "benchmarks.bench_telemetry", "bench_telemetry_overhead", "observability cost (spans on vs off, steady_state)"),
+    ("monitor_overhead", "benchmarks.bench_monitor", "bench_monitor_overhead", "online health-monitor cost + controller score (repro.monitor)"),
     ("resilience_chaos", "benchmarks.bench_resilience", "bench_resilience", "checkpoint/resume + backoff retry (repro.resilience)"),
     ("sketch_update", "benchmarks.bench_query", "bench_sketch_update", "GSS/TCM sketch (Gou 2018)"),
     ("snapshot_build", "benchmarks.bench_query", "bench_snapshot_build", "store->CSR compaction"),
@@ -63,8 +65,17 @@ def merge_bench_ingest(path: str, traj: dict) -> int:
             elif isinstance(prev, dict) and prev:
                 runs = [{"run": 0, "note": "legacy single-run format",
                          "benches": prev}]
-        except (OSError, ValueError):
-            runs = []  # unreadable trajectory: start fresh rather than abort
+        except (OSError, ValueError) as e:
+            # unreadable trajectory: keep the evidence (the file is the
+            # repo's perf history — never silently discard it), start a
+            # fresh trajectory, and say so loudly
+            n = 0
+            while os.path.exists(f"{path}.bak-{n}"):
+                n += 1
+            bak = f"{path}.bak-{n}"
+            os.replace(path, bak)
+            print(f"WARNING: {path} is corrupt ({e}); renamed it to "
+                  f"{bak} and starting a fresh trajectory", file=sys.stderr)
     runs.append({
         "run": len(runs),
         "recorded_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),

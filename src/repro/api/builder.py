@@ -57,6 +57,8 @@ class PipelineBuilder:
         self._dict_stage = None
         self._compression_kw = None
         self._telemetry = None
+        self._monitor = None
+        self._monitor_kw = None
         self._fault_plan = None
         self._fault_injector = None
         self._retry = None
@@ -202,6 +204,28 @@ class PipelineBuilder:
             registry = TelemetryRegistry()
         self._telemetry = registry
         return self
+
+    def with_monitor(self, monitor=None, **kw) -> "PipelineBuilder":
+        """Online health monitoring (repro.monitor): subscribe a
+        `HealthMonitor` to the pipeline's MetricsHub and tap the
+        telemetry registry for per-tick series — streaming anomaly
+        detection (EWMA + Page–Hinkley `HealthEvent`s), SLO error
+        budgets with burn-rate alerts, and controller decision-quality
+        scoring.  Implies `with_telemetry()` (the monitor needs the
+        span histograms and the audit trail).  Pass a configured
+        monitor, or keyword args forwarded to `HealthMonitor` (series,
+        slos, cpu_max, on_tick); read it back via `.health_monitor`
+        (also set as `pipe.monitor` / `hub.monitor` after build)."""
+        self._monitor = monitor
+        self._monitor_kw = dict(kw)
+        if self._telemetry is None:
+            self.with_telemetry()
+        return self
+
+    @property
+    def health_monitor(self):
+        """The `HealthMonitor` wired by `with_monitor` (after build())."""
+        return self._monitor
 
     def on_event(self, hook: Callable[[PipelineEvent], None]) -> "PipelineBuilder":
         self._hooks.append(hook)
@@ -374,6 +398,14 @@ class PipelineBuilder:
             metrics.subscribe(_guide)
         if self._telemetry is not None:
             self._wire_telemetry(pipe, transform, sink, controllers)
+        if self._monitor is not None or self._monitor_kw is not None:
+            from repro.monitor import HealthMonitor
+
+            if self._monitor is None:
+                self._monitor = HealthMonitor(**self._monitor_kw)
+            self._monitor.bind(metrics, cfg=self.cfg)
+            metrics.monitor = self._monitor
+            pipe.monitor = self._monitor
         return pipe
 
     def _wire_telemetry(self, pipe, transform, sink, controllers):

@@ -73,6 +73,11 @@ class MetricsHub:
         self.telemetry = telemetry if telemetry is not None \
             else TelemetryRegistry(enabled=False)
         self._hooks: List[Callable[[PipelineEvent], None]] = []
+        # the attached repro.monitor.HealthMonitor, when one is wired
+        # (PipelineBuilder.with_monitor); it subscribes like any other
+        # hook — this reference only exists so dashboards/exporters can
+        # find the judge next to the signals
+        self.monitor = None
 
     @property
     def counters(self) -> collections.Counter:

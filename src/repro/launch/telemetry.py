@@ -25,6 +25,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import argparse
+import sys
 
 # Core stages the dryrun insists on seeing in the trace: one per
 # instrumented layer (loop, filter, controller, transform, commit).
@@ -94,6 +95,13 @@ def main(argv=None):
         print(summary_tsv(reg))
     else:
         print(text_summary(reg, max_decisions=args.max_decisions))
+    if reg.events_dropped:
+        # also on stderr so the truncation survives `--tsv | cut`-style
+        # post-processing of stdout
+        print(f"WARNING: {reg.events_dropped} span events dropped past "
+              f"max_events={reg.max_events}; trace/JSONL span lists are "
+              f"truncated (histograms and counters stay exact)",
+              file=sys.stderr)
     if args.trace_out:
         print(f"(wrote Chrome trace to {args.trace_out} — load in "
               f"ui.perfetto.dev or chrome://tracing)")

@@ -1,0 +1,85 @@
+"""`repro.monitor` — online health monitoring over the ingest->query
+path (ISSUE 9): the layer that turns PR-7 telemetry into verdicts.
+
+  * `detectors` — streaming EWMA z-score + Page–Hinkley change-point
+    detection over per-tick series, emitting `HealthEvent`s with
+    onset/clear semantics (a flash-crowd onset is detected and
+    timestamped during the run, not found in a post-hoc log grep).
+  * `slo` — declarative SLO specs with error budgets and multi-window
+    burn-rate alerts, evaluated every tick.
+  * `quality` — controller decision-quality scoring from the audit
+    trail: predicted-vs-realized error, regret vs a do-nothing
+    baseline, one controller score per run.
+  * `monitor` — `HealthMonitor`, the standing evaluator wired into a
+    pipeline via `PipelineBuilder.with_monitor()` (or
+    `run_scenario(..., monitor=True)`).
+  * `export` — Prometheus text exposition + the live terminal
+    dashboard.
+  * `regression` — the automated perf gate over BENCH_ingest.json.
+
+Quickstart::
+
+    from repro.monitor import HealthMonitor
+    mon = HealthMonitor()
+    pipe = (PipelineBuilder(cfg).with_source(src)
+            .with_monitor(mon).build())
+    pipe.run(max_ticks=300)
+    print(mon.report()["controller_score"], mon.burst_onset_tick())
+
+CLI: ``python -m repro.launch.monitor --scenario flash_crowd`` and
+``python -m repro.launch.monitor regression --baseline 0``.
+"""
+from repro.monitor.detectors import (
+    DEFAULT_SERIES,
+    DetectorBank,
+    EwmaDetector,
+    HealthEvent,
+    PageHinkley,
+    SeriesSpec,
+)
+from repro.monitor.export import (
+    prometheus_text,
+    render_dashboard,
+    text_report,
+    write_prometheus,
+)
+from repro.monitor.monitor import SERIES_KEYS, HealthMonitor
+from repro.monitor.quality import per_action_scores, score_record, score_trail
+from repro.monitor.regression import (
+    METRICS,
+    MetricSpec,
+    compare_runs,
+    extract_metrics,
+    format_verdict,
+    gate,
+    load_runs,
+)
+from repro.monitor.slo import SLOSpec, SLOTracker, default_slos
+
+__all__ = [
+    "DEFAULT_SERIES",
+    "DetectorBank",
+    "EwmaDetector",
+    "HealthEvent",
+    "HealthMonitor",
+    "METRICS",
+    "MetricSpec",
+    "PageHinkley",
+    "SERIES_KEYS",
+    "SLOSpec",
+    "SLOTracker",
+    "SeriesSpec",
+    "compare_runs",
+    "default_slos",
+    "extract_metrics",
+    "format_verdict",
+    "gate",
+    "load_runs",
+    "per_action_scores",
+    "prometheus_text",
+    "render_dashboard",
+    "score_record",
+    "score_trail",
+    "text_report",
+    "write_prometheus",
+]

@@ -1,0 +1,201 @@
+"""Automated perf-regression gate over BENCH_ingest.json.
+
+The benchmark harness merge-appends one run entry per `--json`
+invocation, so the file IS the repo's perf trajectory.  This module
+turns it into a gate: extract a flat metric vector from a run entry,
+compare a candidate run against a baseline run with **noise-tolerant
+thresholds** (relative tolerance per metric class plus an absolute
+floor, so a 2 ms -> 3 ms flutter on a tiny metric does not fail the
+build), and report pass/fail per metric.  `repro.launch.monitor
+regression` wraps this with a nonzero exit on regression — the CI
+perf gate.
+
+Metric classes:
+
+  * lower-is-better (latencies, drops, overhead): regress when
+    candidate > baseline * (1 + tol) and candidate - baseline > floor.
+  * higher-is-better (throughputs, scores): regress when
+    candidate < baseline * (1 - tol) and baseline - candidate > floor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, List, Optional, Tuple
+
+# default relative tolerance: wall-clock benches on shared CI hosts
+# are noisy; 35% headroom holds the gate to real regressions (a 2x
+# injected slowdown still trips it with 3x margin)
+DEFAULT_TOL = 0.35
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One gated metric: where it lives in a run entry and how to
+    judge movement."""
+
+    name: str
+    path: Tuple              # keys into run["benches"], traversed safely
+    higher_better: bool = False
+    tol: float = DEFAULT_TOL
+    floor: float = 0.0       # ignore absolute moves smaller than this
+
+
+def _dig(obj, path: Tuple):
+    for k in path:
+        if isinstance(obj, dict):
+            obj = obj.get(k)
+        elif isinstance(obj, (list, tuple)) and isinstance(k, int) \
+                and -len(obj) <= k < len(obj):
+            obj = obj[k]
+        else:
+            return None
+        if obj is None:
+            return None
+    return obj
+
+
+METRICS: Tuple[MetricSpec, ...] = (
+    MetricSpec("commit_ms_mean",
+               ("ingest_trajectory", "derived", "commit_ms_mean"),
+               floor=2.0),
+    MetricSpec("dropped_total",
+               ("ingest_trajectory", "derived", "dropped_total"),
+               tol=0.5, floor=256.0),
+    MetricSpec("probe_rounds_max",
+               ("ingest_trajectory", "derived", "probe_rounds_max"),
+               tol=0.5, floor=8.0),
+    MetricSpec("store_ingest_us_per_commit",
+               ("store_ingest", "rows", 0, "us_per_commit"),
+               floor=200.0),
+    MetricSpec("workload_max_records_per_stream_s",
+               ("workload_scenarios", "derived", "max_records_per_stream_s"),
+               higher_better=True, floor=5.0),
+    MetricSpec("telemetry_overhead_pct",
+               ("telemetry_overhead", "derived", "overhead_pct"),
+               tol=1.0, floor=3.0),
+    MetricSpec("monitor_overhead_pct",
+               ("monitor_overhead", "derived", "overhead_pct"),
+               tol=1.0, floor=3.0),
+    MetricSpec("controller_score",
+               ("monitor_overhead", "derived", "controller_score"),
+               higher_better=True, tol=0.15, floor=0.05),
+)
+
+
+def extract_metrics(run_entry: Dict,
+                    metrics: Tuple[MetricSpec, ...] = METRICS
+                    ) -> Dict[str, float]:
+    """Flat {metric: value} for one run entry; absent benches are
+    skipped (older runs predate newer benches)."""
+    benches = run_entry.get("benches", run_entry)
+    out: Dict[str, float] = {}
+    for m in metrics:
+        v = _dig(benches, m.path)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[m.name] = float(v)
+    return out
+
+
+def judge(spec: MetricSpec, base: float, cand: float) -> Dict:
+    """One metric verdict: regressed / improved / stable."""
+    if spec.higher_better:
+        delta = base - cand   # positive = got worse
+        regressed = cand < base * (1.0 - spec.tol) and delta > spec.floor
+        improved = cand > base * (1.0 + spec.tol) and -delta > spec.floor
+    else:
+        delta = cand - base
+        regressed = cand > base * (1.0 + spec.tol) and delta > spec.floor
+        improved = cand < base * (1.0 - spec.tol) and -delta > spec.floor
+    ratio = cand / base if base else float("inf") if cand else 1.0
+    return {
+        "metric": spec.name,
+        "baseline": base,
+        "candidate": cand,
+        "ratio": round(ratio, 4),
+        "tol": spec.tol,
+        "higher_better": spec.higher_better,
+        "verdict": ("regressed" if regressed
+                    else "improved" if improved else "stable"),
+    }
+
+
+def load_runs(path: str) -> List[Dict]:
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and isinstance(data.get("runs"), list):
+        return data["runs"]
+    if isinstance(data, dict) and data:
+        return [{"run": 0, "benches": data}]  # legacy single-run file
+    raise ValueError(f"{path}: no runs found")
+
+
+def compare_runs(baseline: Dict, candidate: Dict,
+                 metrics: Tuple[MetricSpec, ...] = METRICS,
+                 mutate: Optional[Callable[[Dict[str, float]], None]] = None
+                 ) -> Dict:
+    """Gate verdict comparing two run entries.  `mutate` (tests /
+    --inject) edits the candidate metric vector before judgment —
+    how the gate's own alarm path is exercised in CI."""
+    base_m = extract_metrics(baseline, metrics)
+    cand_m = extract_metrics(candidate, metrics)
+    if mutate is not None:
+        mutate(cand_m)
+    spec_by_name = {m.name: m for m in metrics}
+    rows = [judge(spec_by_name[name], base_m[name], cand_m[name])
+            for name in sorted(set(base_m) & set(cand_m))]
+    regressed = [r for r in rows if r["verdict"] == "regressed"]
+    return {
+        "baseline_run": baseline.get("run"),
+        "candidate_run": candidate.get("run"),
+        "compared": len(rows),
+        "skipped": sorted((set(base_m) ^ set(cand_m))
+                          | (set(spec_by_name) - set(base_m) - set(cand_m))),
+        "rows": rows,
+        "regressions": [r["metric"] for r in regressed],
+        "ok": not regressed,
+    }
+
+
+def gate(bench_path: str, baseline: int = 0, candidate: int = -1,
+         metrics: Tuple[MetricSpec, ...] = METRICS,
+         mutate: Optional[Callable] = None) -> Dict:
+    """Load BENCH_ingest.json and compare run `candidate` (default:
+    latest) against run `baseline` (default: 0, the committed seed)."""
+    runs = load_runs(bench_path)
+    if not runs:
+        raise ValueError(f"{bench_path}: empty trajectory")
+    n = len(runs)
+
+    def _idx(i: int) -> int:
+        i = i if i >= 0 else n + i
+        if not 0 <= i < n:
+            raise IndexError(f"run index {i} out of range (have {n})")
+        return i
+
+    bi, ci = _idx(baseline), _idx(candidate)
+    verdict = compare_runs(runs[bi], runs[ci], metrics, mutate=mutate)
+    verdict["bench_path"] = os.path.abspath(bench_path)
+    verdict["runs_in_trajectory"] = n
+    return verdict
+
+
+def format_verdict(v: Dict) -> str:
+    out = [f"perf gate: run {v['candidate_run']} vs baseline run "
+           f"{v['baseline_run']} ({v['compared']} metrics, "
+           f"{len(v['skipped'])} skipped)"]
+    for r in v["rows"]:
+        mark = {"regressed": "FAIL", "improved": "gain",
+                "stable": " ok "}[r["verdict"]]
+        arrow = "^" if r["higher_better"] else "v"
+        out.append(
+            f"  [{mark}] {r['metric']:<36} {r['baseline']:>12.3f} -> "
+            f"{r['candidate']:>12.3f}  (x{r['ratio']:.2f}, "
+            f"tol {r['tol']:.0%} {arrow})")
+    if v["skipped"]:
+        out.append(f"  (skipped, not in both runs: "
+                   f"{', '.join(v['skipped'])})")
+    out.append("verdict: " + ("OK — no perf regression" if v["ok"] else
+                              f"REGRESSED: {', '.join(v['regressions'])}"))
+    return "\n".join(out)

@@ -48,6 +48,9 @@ class AuditRecord:
     inputs: Dict[str, Optional[float]]  # full PerfMon vector (below)
     mu_real: Optional[float] = None     # measured mu after the tick
     beta_e_real: Optional[float] = None  # actual effective buffer pushed
+    # decision-quality verdict (repro.monitor.quality.score_record):
+    # score in [0,1], prediction error, regret vs do-nothing baseline
+    quality: Optional[Dict] = None
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)

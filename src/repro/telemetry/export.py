@@ -114,13 +114,28 @@ def write_jsonl(reg: TelemetryRegistry, path: str) -> str:
     root = reg._root
     t0 = root.t0_ns
     with open(path, "w") as f:
+        # meta first so consumers can judge completeness before reading
+        # the rest: a nonzero events_dropped means the span *list* is
+        # truncated (histograms and counters below stay exact)
+        f.write(json.dumps({
+            "type": "meta", "exporter": "repro.telemetry",
+            "events_dropped": root.events_dropped,
+            "max_events": root.max_events,
+            "spans": len(root.events), "audit_records": len(root.audit),
+        }) + "\n")
         for (name, shard, s0, s1) in root.events:
             f.write(json.dumps({
                 "type": "span", "name": name, "shard": shard,
                 "t_us": (s0 - t0) / 1e3, "dur_us": (s1 - s0) / 1e3,
             }) + "\n")
         for rec in root.audit:
-            f.write(json.dumps({"type": "audit", **rec.to_dict()}) + "\n")
+            d = rec.to_dict()
+            # explicit resolution marker: records the run never resolved
+            # (e.g. the loop stopped mid-tick) export with realized=null
+            # rather than erroring or being skipped
+            d["realized"] = None if rec.mu_real is None else \
+                {"mu": rec.mu_real, "beta_e": rec.beta_e_real}
+            f.write(json.dumps({"type": "audit", **d}) + "\n")
         for (name, shard), h in sorted(root._hists.items(),
                                        key=lambda kv: (kv[0][0],
                                                        kv[0][1] is not None,
@@ -142,10 +157,17 @@ _COLS = ("count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms",
 
 
 def summary_tsv(reg: TelemetryRegistry) -> str:
-    """Per-stage latency table (aggregated across shards) as TSV."""
+    """Per-stage latency table (aggregated across shards) as TSV.
+    A `#`-prefixed warning line trails the table when span events were
+    dropped past max_events (the table itself stays exact)."""
+    root = reg._root
     lines = ["stage\t" + "\t".join(_COLS)]
-    for name, st in sorted(reg._root.summary().items()):
+    for name, st in sorted(root.summary().items()):
         lines.append(name + "\t" + "\t".join(str(st[c]) for c in _COLS))
+    if root.events_dropped:
+        lines.append(f"# WARNING: {root.events_dropped} span events "
+                     f"dropped past max_events={root.max_events} "
+                     f"(histograms above stay exact)")
     return "\n".join(lines)
 
 
@@ -179,12 +201,15 @@ def text_summary(reg: TelemetryRegistry, max_decisions: int = 20) -> str:
     for r in shown:
         rsn = f" reason={r.reason}" if r.reason else ""
         mu_r = "-" if r.mu_real is None else f"{r.mu_real:.3f}"
+        # .get: records from hand-built or partially-restored trails may
+        # not carry the full PerfMon input vector
         out.append(
             f"  t={r.t:8.1f} shard={r.shard} {r.action:<10}{rsn:<17}"
             f"beta={r.beta:<6} mu_pred={r.mu_pred:.3f} mu_real={mu_r} "
-            f"rate={r.inputs['rate']:.1f} rho={r.inputs['rho']:.3f} "
-            f"pressure={r.inputs['pressure']:.3f} "
-            f"spill={r.inputs['spill_depth']}")
+            f"rate={r.inputs.get('rate', 0.0):.1f} "
+            f"rho={r.inputs.get('rho', 0.0):.3f} "
+            f"pressure={r.inputs.get('pressure', 0.0):.3f} "
+            f"spill={r.inputs.get('spill_depth', 0)}")
     if len(root.audit) > len(shown):
         out.append(f"  ... {len(root.audit) - len(shown)} more "
                    f"(JSONL/Chrome trace has all)")

@@ -88,6 +88,28 @@ class Histogram:
         self.max_ns = max(self.max_ns, other.max_ns)
         return self
 
+    def copy(self) -> "Histogram":
+        h = Histogram()
+        h.counts = list(self.counts)
+        h.count = self.count
+        h.sum_ns = self.sum_ns
+        h.max_ns = self.max_ns
+        return h
+
+    def since(self, prev: "Histogram") -> "Histogram":
+        """The delta histogram vs an earlier snapshot of this series
+        (`prev` must be a previous cumulative state).  Bucket counts
+        and count/sum subtract exactly; `max_ns` is the cumulative max
+        (a true window max is not recoverable from snapshots) — the
+        conservative-percentile property is preserved because the
+        delta's percentile clamp still uses a max >= any window value."""
+        h = Histogram()
+        h.counts = [a - b for a, b in zip(self.counts, prev.counts)]
+        h.count = self.count - prev.count
+        h.sum_ns = self.sum_ns - prev.sum_ns
+        h.max_ns = self.max_ns
+        return h
+
     def percentile_ns(self, q: float) -> int:
         """Upper bound of the bucket holding the q-quantile (q in [0,1])."""
         if self.count == 0:
@@ -270,6 +292,46 @@ class TelemetryRegistry:
         """Per-stage stats aggregated across shards: count, mean,
         p50/p95/p99, max, total — the `WorkloadReport`/CLI payload."""
         return {n: self.aggregate(n).stats() for n in self.stage_names()}
+
+
+class SeriesTap:
+    """Incremental reader over a registry's cumulative state.
+
+    The online-monitoring primitive (repro.monitor): histograms and
+    counters accumulate for the whole run, but a standing detector
+    needs *per-interval* values.  A tap remembers the last snapshot it
+    took of each series and returns exact deltas:
+
+        tap = SeriesTap(reg)
+        ...                                   # one tick elapses
+        d = tap.hist_delta("commit.upsert")   # this interval only
+        d.count, d.mean_ns, d.percentile_ns(0.99)
+        n = tap.counter_delta("commit")       # counter increments
+
+    Deltas are exact integer subtraction on the fixed log-bucket
+    state — O(NBUCKETS) per poll, no per-event cost, and polling never
+    perturbs the registry.  Histogram reads aggregate across shards
+    (the monitor watches the fleet, not one shard).
+    """
+
+    def __init__(self, registry: "TelemetryRegistry"):
+        self.registry = registry._root
+        self._hist_prev: Dict[str, Histogram] = {}
+        self._counter_prev: Dict[str, int] = {}
+
+    def hist_delta(self, name: str) -> Histogram:
+        """Delta histogram for `name` (all shards) since the last poll."""
+        cur = self.registry.aggregate(name)
+        prev = self._hist_prev.get(name)
+        self._hist_prev[name] = cur
+        return cur if prev is None else cur.since(prev)
+
+    def counter_delta(self, name: str) -> int:
+        """Increment of `registry.counters[name]` since the last poll."""
+        cur = int(self.registry.counters.get(name, 0))
+        d = cur - self._counter_prev.get(name, 0)
+        self._counter_prev[name] = cur
+        return d
 
 
 # The module-wide disabled registry: instrumented classes default

@@ -76,6 +76,15 @@ class WorkloadReport:
     stage_latency_ms: Dict[str, Dict[str, float]] = \
         dataclasses.field(default_factory=dict)
     audit_decisions: int = 0     # controller audit-trail records
+    # health monitoring (repro.monitor; inert defaults when off)
+    monitor_enabled: bool = False
+    health_events: List[Dict] = dataclasses.field(default_factory=list)
+    burst_onset_tick: int = -1   # first "rate" onset (-1 = none detected)
+    slo_summary: Dict = dataclasses.field(default_factory=dict)
+    slo_breaches: int = 0        # SLO-breaching ticks across all specs
+    slo_alerts: int = 0          # multi-window burn-rate alert onsets
+    controller_score: float = 1.0  # mean per-decision quality in [0,1]
+    decision_quality: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def n_transitions(self) -> int:
@@ -107,7 +116,21 @@ class WorkloadReport:
                f"commit_ms={self.commit_ms_mean:.2f}"
                if self.dict_compress else "")
             + (self._stage_summary() if self.telemetry_enabled else "")
+            + (self._monitor_summary() if self.monitor_enabled else "")
         )
+
+    def _monitor_summary(self) -> str:
+        onset = f"burst_onset_tick={self.burst_onset_tick}" \
+            if self.burst_onset_tick >= 0 else "no burst onset"
+        missed = [n for n, s in self.slo_summary.items()
+                  if not s.get("met", True)]
+        slos = f"{len(self.slo_summary)} SLOs" \
+            + (f" ({len(missed)} missed: {', '.join(sorted(missed))})"
+               if missed else " (all met)")
+        return (f"\nmonitor: {len(self.health_events)} health events, "
+                f"{onset} | {slos}, {self.slo_breaches} breaching ticks, "
+                f"{self.slo_alerts} burn alerts | controller_score="
+                f"{self.controller_score:.4f}")
 
     def _stage_summary(self, top: int = 6) -> str:
         if not self.stage_latency_ms:
@@ -150,6 +173,7 @@ def run_scenario(
     spill_dir: Optional[str] = None,
     on_event=None,
     telemetry=None,
+    monitor=None,
     trace: Optional[str] = None,
     trace_jsonl: Optional[str] = None,
     fault_plan=None,
@@ -173,6 +197,14 @@ def run_scenario(
     after the run and `trace_jsonl` the flat JSONL sink — either
     implies telemetry.  With telemetry on the report carries the
     per-stage p50/p95/p99 latency breakdown (`stage_latency_ms`).
+
+    `monitor` turns on online health monitoring (repro.monitor; pass
+    True, or a configured `HealthMonitor` to keep for inspection) —
+    implies telemetry.  The report then carries the detector
+    `health_events` (with `burst_onset_tick`), the per-SLO
+    budget/burn summary, and the controller decision-quality score
+    (`controller_score`); every audit record gains its `quality`
+    verdict in place.
 
     Resilience (repro.resilience): `fault_plan` injects commit faults
     (and, via `crash_at_tick`, raises `PipelineKilled` mid-run);
@@ -212,11 +244,20 @@ def run_scenario(
             hits[1] += 1
 
     reg = None
-    if telemetry or trace or trace_jsonl:
+    if telemetry or trace or trace_jsonl or monitor:
         from repro.telemetry import TelemetryRegistry
 
         reg = telemetry if isinstance(telemetry, TelemetryRegistry) \
             else TelemetryRegistry()
+    mon = None
+    if monitor:
+        from repro.monitor import HealthMonitor, default_slos
+
+        mon = monitor if isinstance(monitor, HealthMonitor) \
+            else HealthMonitor(slos=default_slos(
+                cpu_max=cfg.cpu_max, theta2=cfg.theta2,
+                checkpoint_every=checkpoint_every
+                if checkpoint_dir is not None else 0))
 
     sdir = spill_dir or f"/tmp/repro_workload_{scn.name}_{seed}"
     b = (PipelineBuilder(cfg)
@@ -226,6 +267,8 @@ def run_scenario(
          .on_event(_count_drops))
     if reg is not None:
         b = b.with_telemetry(reg)
+    if mon is not None:
+        b = b.with_monitor(mon)
     if sketch_guided:
         b = b.sketch_guided()
     if dict_compress:
@@ -305,6 +348,12 @@ def run_scenario(
 
         store_digest = pytree_digest(store)
         snapshot_digest = pytree_digest(build_snapshot(store))
+    mon_report: Dict = {}
+    if mon is not None:
+        # finish BEFORE the exporters run so every audit record
+        # already carries its quality verdict in the trace files
+        mon.finish()
+        mon_report = mon.report()
     stage_latency: Dict[str, Dict[str, float]] = {}
     n_audit = 0
     if reg is not None:
@@ -361,4 +410,12 @@ def run_scenario(
         telemetry_enabled=reg is not None,
         stage_latency_ms=stage_latency,
         audit_decisions=n_audit,
+        monitor_enabled=mon is not None,
+        health_events=mon_report.get("health_events", []),
+        burst_onset_tick=mon_report.get("burst_onset_tick", -1),
+        slo_summary=mon_report.get("slo", {}),
+        slo_breaches=mon_report.get("slo_breaches", 0),
+        slo_alerts=mon_report.get("slo_alerts", 0),
+        controller_score=mon_report.get("controller_score", 1.0),
+        decision_quality=mon_report.get("quality", {}),
     )
