@@ -26,7 +26,8 @@ import time
 TRAJECTORY_BENCHES = ("ingest_trajectory", "store_ingest", "snapshot_build",
                       "workload_scenarios", "compress_dictionary",
                       "telemetry_overhead", "resilience_chaos",
-                      "monitor_overhead")
+                      "monitor_overhead", "lineage_overhead",
+                      "lineage_freshness")
 
 BENCHES = [
     # (name, module, function, paper ref)
@@ -44,6 +45,8 @@ BENCHES = [
     ("compress_dictionary", "benchmarks.bench_compress", "bench_compress_dictionary", "GraphZip dictionary compression (Fig 13 + refs)"),
     ("telemetry_overhead", "benchmarks.bench_telemetry", "bench_telemetry_overhead", "observability cost (spans on vs off, steady_state)"),
     ("monitor_overhead", "benchmarks.bench_monitor", "bench_monitor_overhead", "online health-monitor cost + controller score (repro.monitor)"),
+    ("lineage_overhead", "benchmarks.bench_lineage", "bench_lineage_overhead", "watermark/provenance tracking cost (repro.lineage)"),
+    ("lineage_freshness", "benchmarks.bench_lineage", "bench_lineage_freshness", "freshness SLIs per scenario (repro.lineage)"),
     ("resilience_chaos", "benchmarks.bench_resilience", "bench_resilience", "checkpoint/resume + backoff retry (repro.resilience)"),
     ("sketch_update", "benchmarks.bench_query", "bench_sketch_update", "GSS/TCM sketch (Gou 2018)"),
     ("snapshot_build", "benchmarks.bench_query", "bench_snapshot_build", "store->CSR compaction"),

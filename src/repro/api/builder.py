@@ -59,6 +59,8 @@ class PipelineBuilder:
         self._telemetry = None
         self._monitor = None
         self._monitor_kw = None
+        self._lineage = None
+        self._lineage_kw = None
         self._fault_plan = None
         self._fault_injector = None
         self._retry = None
@@ -226,6 +228,26 @@ class PipelineBuilder:
     def health_monitor(self):
         """The `HealthMonitor` wired by `with_monitor` (after build())."""
         return self._monitor
+
+    def with_lineage(self, tracker=None, **kw) -> "PipelineBuilder":
+        """Batch provenance + event-time watermarks (repro.lineage):
+        tag every batch at the buffer with a monotone id + event-time
+        envelope, follow it through spill/pool/archive to the
+        queryable snapshot, and maintain the committed/queryable
+        watermark pair plus per-path freshness histograms.  Pass a
+        configured `LineageTracker`, or keyword args forwarded to it
+        (sample_rate, dt, buffered_slack, ...); read it back via
+        `.lineage_tracker` (also set as `pipe.lineage` /
+        `hub.lineage` after build)."""
+        self._lineage = tracker if tracker is not None \
+            and tracker is not True else None
+        self._lineage_kw = dict(kw)
+        return self
+
+    @property
+    def lineage_tracker(self):
+        """The `LineageTracker` wired by `with_lineage` (after build())."""
+        return self._lineage
 
     def on_event(self, hook: Callable[[PipelineEvent], None]) -> "PipelineBuilder":
         self._hooks.append(hook)
@@ -406,6 +428,30 @@ class PipelineBuilder:
             self._monitor.bind(metrics, cfg=self.cfg)
             metrics.monitor = self._monitor
             pipe.monitor = self._monitor
+        if self._lineage is not None or self._lineage_kw is not None:
+            from repro.lineage import LineageTracker
+
+            if self._lineage is None:
+                self._lineage = LineageTracker(**(self._lineage_kw or {}))
+            tracker = self._lineage
+            metrics.lineage = tracker
+            pipe.lineage = tracker
+            # intake observation at every buffer stage, tag custody at
+            # the ingestor, and the per-shard hubs `controlled_tick`
+            # actually receives
+            if isinstance(pipe, ShardedPipeline):
+                for b in pipe.shards:
+                    b.lineage = tracker
+                for h in pipe._hubs:
+                    h.lineage = tracker
+            else:
+                pipe.buffer_stage.lineage = tracker
+            ingestor = getattr(sink, "ingestor", None)
+            if ingestor is not None and hasattr(ingestor, "lineage"):
+                ingestor.lineage = tracker
+            # bind AFTER the monitor so the per-tick "watermark" event
+            # lands in the tick row the monitor just opened
+            tracker.bind(metrics)
         return pipe
 
     def _wire_telemetry(self, pipe, transform, sink, controllers):

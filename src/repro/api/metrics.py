@@ -78,6 +78,10 @@ class MetricsHub:
         # hook — this reference only exists so dashboards/exporters can
         # find the judge next to the signals
         self.monitor = None
+        # the attached repro.lineage.LineageTracker, when one is wired
+        # (PipelineBuilder.with_lineage): `controlled_tick` looks it up
+        # here to tag batches; None keeps the hot path branch-only
+        self.lineage = None
 
     @property
     def counters(self) -> collections.Counter:

@@ -62,6 +62,7 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
     tel = hub.telemetry
     pm = buf.perfmon
     aud = buf.controller.audit
+    lineage = getattr(hub, "lineage", None)
     with tel.span("decide"):
         dec = buf.decide(len(buf) * 4.0, 0.0, now=now)
 
@@ -72,8 +73,17 @@ def controlled_tick(buf: BufferControlStage, transform, sink, consumer,
             hub.emit("drain", now, depth=buf.spill_depth)
         batch = buf.take_batch()
         if batch:
+            tag = handed = None
+            if lineage is not None:
+                tag = lineage.open_batch(
+                    batch, now, shard=getattr(tel, "shard", None),
+                    spilled=buf.last_take_spilled)
             et, n_instr, raw_i = transform.encode(batch)
+            if tag is not None:
+                handed = lineage.stage_commit(tag, sink)
             out = sink.commit(et, now=now)
+            if tag is not None:
+                lineage.after_commit(tag, out, now, handed=handed)
             with tel.span("consume"):
                 mu = consumer.consume(n_instr, cdt, now=now)
             committed = out.get("committed", False)
@@ -202,8 +212,17 @@ class StreamPipeline:
 
     # ------------------------------------------------------------------
     def _transform_and_commit(self, records, now: float, dt: float):
+        lineage = getattr(self.metrics, "lineage", None)
+        tag = handed = None
+        if lineage is not None:
+            tag = lineage.open_batch(
+                records, now, spilled=self.buffer_stage.last_take_spilled)
         et, n_instr, raw_instr = self.transform.encode(records)
+        if tag is not None:
+            handed = lineage.stage_commit(tag, self.sink)
         out = self.sink.commit(et, now=now)
+        if tag is not None:
+            lineage.after_commit(tag, out, now, handed=handed)
         mu = self.consumer.consume(n_instr, dt, now=now)
         committed = out.get("committed", False)
         rho = out.get("rho", 1.0) if committed else 1.0
@@ -296,6 +315,9 @@ class StreamPipeline:
             s["consumer"] = self.consumer.state()
         if hasattr(self.sink, "state"):
             s["sink"] = self.sink.state()
+        tracker = getattr(self.metrics, "lineage", None)
+        if tracker is not None:
+            s["lineage"] = tracker.state()
         return s
 
     def restore_state(self, s: dict) -> None:
@@ -309,3 +331,6 @@ class StreamPipeline:
             self.consumer.restore_state(s["consumer"])
         if "sink" in s and hasattr(self.sink, "restore_state"):
             self.sink.restore_state(s["sink"])
+        tracker = getattr(self.metrics, "lineage", None)
+        if tracker is not None and "lineage" in s:
+            tracker.restore_state(s["lineage"])

@@ -103,6 +103,17 @@ class GraphIngestor:
         self.replayed = 0
         self.attempts = 0
         self.pool_overflows = 0
+        # ---- provenance (repro.lineage; None tracker = zero cost) ----
+        # `_lineage_next` is the tag the pipeline staged for the very
+        # next push; `_pool_tags`/`_archive_tags` ride parallel to the
+        # pool and the LOGICAL archive (memory + disk spill, FIFO) so
+        # the spill-file format stays unchanged.  Tests that poke
+        # batches straight into `pool`/`archive` never see any of this:
+        # every tag op is guarded on the tracker and on deque depth.
+        self.lineage = None
+        self._lineage_next = None
+        self._pool_tags: Deque = collections.deque()
+        self._archive_tags: Deque = collections.deque()
 
     # ---- archive (bounded, disk-spilled past max_archive) -----------
     @property
@@ -126,7 +137,13 @@ class GraphIngestor:
         self._archive_n += 1
         return fn
 
-    def _archive_put(self, et) -> None:
+    def _archive_put(self, et, tag=None, now: Optional[float] = None,
+                     degraded: bool = False) -> None:
+        if self.lineage is not None and tag is not None:
+            self._archive_tags.append(tag)
+            self.lineage.mark_archived(
+                tag, now if now is not None else time.time(),
+                degraded=degraded)
         self.archived_total += 1
         # keep FIFO across the memory/disk boundary: once anything
         # spilled, later batches must spill too or replay reorders
@@ -150,12 +167,13 @@ class GraphIngestor:
     # ------------------------------------------------------------------
     def push(self, et: EdgeTable, now: Optional[float] = None) -> dict:
         """GRAPHPUSH: pool admission + commit.  Returns commit stats."""
+        tag, self._lineage_next = self._lineage_next, None
+        wall = now if now is not None else time.time()
         if self.retry_policy is not None and self.degraded:
-            wall = now if now is not None else time.time()
             if wall < self.next_retry_t:
                 # degraded mode: the store is down and the backoff gate
                 # is closed — preserve the batch without a doomed probe
-                self._archive_put(et)
+                self._archive_put(et, tag, now=wall, degraded=True)
                 return {"committed": False, "archived": self.archive_depth,
                         "degraded": True}
         if len(self.pool) >= self.max_pool_size:
@@ -163,23 +181,29 @@ class GraphIngestor:
                 # hard cap: divert to the archive instead of unbounded
                 # pool growth under sustained failure
                 self.pool_overflows += 1
-                self._archive_put(et)
+                self._archive_put(et, tag, now=wall)
                 return {"committed": False, "pooled": len(self.pool),
                         "pool_overflow": self.pool_overflows}
             # pool full: hold in local memory until timeout (paper §III-B)
             self.pool.append(et)
+            if self.lineage is not None and tag is not None:
+                self._pool_tags.append(tag)
+                self.lineage.mark_pooled(tag, wall)
             return {"committed": False, "pooled": len(self.pool)}
         self.pool.append(et)
+        if self.lineage is not None and tag is not None:
+            self._pool_tags.append(tag)
         stats = {}
         while self.pool:
             batch = self.pool.popleft()
-            stats = self._commit(batch, now)
+            btag = self._pool_tags.popleft() if self._pool_tags else None
+            stats = self._commit(batch, now, tag=btag)
             if not stats["committed"]:
                 break
         return stats
 
     def _commit(self, et: EdgeTable, now: Optional[float],
-                archive_on_fail: bool = True) -> dict:
+                archive_on_fail: bool = True, tag=None) -> dict:
         tel = self.telemetry
         wall = now if now is not None else time.time()
         t0 = time.perf_counter()
@@ -217,11 +241,19 @@ class GraphIngestor:
                 refs=int(s.get("dict_refs", 0)),
             )
             self.commits.append(rec)
+            if self.lineage is not None and tag is not None:
+                # store took it: the committed low watermark may advance
+                self.lineage.mark_committed(tag, wall)
             with tel.span("commit.hooks"):
                 if self.commit_hook is not None:
                     self.commit_hook(et, s)
                 for hook in self.commit_hooks:
                     hook(et, s)
+            if self.lineage is not None and tag is not None:
+                # the hook fan-out (snapshot maintainer absorb + sketch
+                # update) has run: queries can now SEE these records —
+                # only here does the queryable watermark advance
+                self.lineage.mark_queryable(tag, wall)
             rho = rec.new_nodes / max(rec.batch_nodes, 1)
             out = {
                 "committed": True,
@@ -254,7 +286,8 @@ class GraphIngestor:
                 if self.degraded:
                     out["degraded"] = True
             if archive_on_fail:
-                self._archive_put(et)
+                self._archive_put(et, tag, now=wall,
+                                  degraded=bool(out.get("degraded")))
             self.commits.append(
                 CommitRecord(wall, 0.0, 0, 0, 0, ok=False)
             )
@@ -275,12 +308,20 @@ class GraphIngestor:
         while self.archive_depth:
             self._archive_refill()
             et = self.archive.popleft()
-            if self._commit(et, now, archive_on_fail=False)["committed"]:
+            tag = None
+            if self.lineage is not None and self._archive_tags:
+                tag = self._archive_tags.popleft()
+                self.lineage.mark_replay(
+                    tag, now if now is not None else time.time())
+            if self._commit(et, now, archive_on_fail=False,
+                            tag=tag)["committed"]:
                 n += 1
                 self.replayed += 1
                 continue
             # failed head returns to the FRONT: replay order is FIFO
             self.archive.appendleft(et)
+            if tag is not None:
+                self._archive_tags.appendleft(tag)
             break
         if n:
             self.telemetry.count("retry.replayed", n)
@@ -325,6 +366,9 @@ class GraphIngestor:
             "consecutive_failures": self.consecutive_failures,
             "next_retry_t": self.next_retry_t,
             "fail_hook": fh.state() if hasattr(fh, "state") else None,
+            "pool_tags": list(self._pool_tags),
+            "archive_tags": list(self._archive_tags),
+            "lineage_next": self._lineage_next,
         }
 
     def restore_state(self, s: dict) -> None:
@@ -350,3 +394,7 @@ class GraphIngestor:
         if s.get("fail_hook") is not None \
                 and hasattr(self.fail_hook, "restore_state"):
             self.fail_hook.restore_state(s["fail_hook"])
+        # .get: checkpoints written before lineage landed lack these
+        self._pool_tags = collections.deque(s.get("pool_tags", ()))
+        self._archive_tags = collections.deque(s.get("archive_tags", ()))
+        self._lineage_next = s.get("lineage_next")

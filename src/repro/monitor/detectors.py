@@ -233,6 +233,9 @@ DEFAULT_SERIES: Tuple[SeriesSpec, ...] = (
     SeriesSpec("spill_depth", direction=1, z_on=3.0),  # disk backlog
     SeriesSpec("mu", direction=1, z_on=4.0),         # consumer occupancy
     SeriesSpec("dict_hit", direction=-1),            # compressibility drop
+    SeriesSpec("queryable_lag_ms", direction=1, z_on=4.0),  # freshness
+    # (repro.lineage: query-surface staleness spike — only fed on
+    # lineage-tracked runs, absent values are skipped)
 )
 
 

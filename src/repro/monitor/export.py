@@ -31,8 +31,11 @@ def _fmt(v: float) -> str:
 
 
 def prometheus_text(monitor=None,
-                    registry: Optional[TelemetryRegistry] = None) -> str:
-    """Render the run's state in Prometheus exposition format."""
+                    registry: Optional[TelemetryRegistry] = None,
+                    lineage=None) -> str:
+    """Render the run's state in Prometheus exposition format.
+    `lineage` (a `repro.lineage.LineageTracker`) appends the
+    watermark/freshness/conservation gauges."""
     lines: List[str] = []
     if registry is None and monitor is not None:
         registry = monitor._registry
@@ -115,13 +118,19 @@ def prometheus_text(monitor=None,
                      "decision-quality score in [0,1]")
         lines.append("# TYPE repro_controller_score gauge")
         lines.append(f"repro_controller_score {_fmt(monitor.controller_score)}")
+    if lineage is not None:
+        from repro.lineage import prometheus_lines
+
+        lines.extend(prometheus_lines(lineage))
     return "\n".join(lines) + "\n"
 
 
 def write_prometheus(path: str, monitor=None,
-                     registry: Optional[TelemetryRegistry] = None) -> str:
+                     registry: Optional[TelemetryRegistry] = None,
+                     lineage=None) -> str:
     with open(path, "w") as f:
-        f.write(prometheus_text(monitor=monitor, registry=registry))
+        f.write(prometheus_text(monitor=monitor, registry=registry,
+                                lineage=lineage))
     return path
 
 

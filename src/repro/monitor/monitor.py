@@ -47,7 +47,8 @@ from repro.monitor.slo import SLOSpec, SLOTracker, default_slos
 # metrics both draw from these keys)
 SERIES_KEYS = ("rate", "raw", "pushed", "drops", "commits",
                "commit_failures", "commit_ms", "commit_p99_ms", "mu",
-               "spill_depth", "dict_hit", "ticks_since_checkpoint")
+               "spill_depth", "dict_hit", "ticks_since_checkpoint",
+               "ingest_lag_ms", "queryable_lag_ms")
 
 
 class HealthMonitor:
@@ -142,6 +143,12 @@ class HealthMonitor:
                 a["mu"].append(float(ev.payload["mu"]))
             a["spill_depth"] = max(a["spill_depth"],
                                    float(ev.payload.get("spill_depth", 0)))
+        elif k == "watermark":
+            # repro.lineage staleness, re-emitted at each tick boundary
+            # (the tracker's hook runs after ours, so this lands in the
+            # row we just opened)
+            a["ingest_lag_ms"] = ev.payload.get("ingest_lag_ms")
+            a["queryable_lag_ms"] = ev.payload.get("queryable_lag_ms")
         elif k == "checkpoint":
             self._checkpointing = True
             self._since_ckpt = 0
@@ -165,6 +172,10 @@ class HealthMonitor:
             "mu": sum(a["mu"]) / len(a["mu"]) if a["mu"] else None,
             "commit_ms": None, "commit_p99_ms": None,
             "dict_hit": None, "ticks_since_checkpoint": None,
+            # None when no lineage tracker is wired: detectors and
+            # SLOs skip None, so non-lineage runs are unchanged
+            "ingest_lag_ms": a.get("ingest_lag_ms"),
+            "queryable_lag_ms": a.get("queryable_lag_ms"),
         }
         if self._tap is not None:
             h = self._tap.hist_delta("commit.upsert")

@@ -81,6 +81,18 @@ METRICS: Tuple[MetricSpec, ...] = (
     MetricSpec("controller_score",
                ("monitor_overhead", "derived", "controller_score"),
                higher_better=True, tol=0.15, floor=0.05),
+    # freshness SLIs (repro.lineage): lag values are stream-time and
+    # deterministic per seed, so the tolerances guard real semantic
+    # drift (a batch routed through a slower path), not host noise
+    MetricSpec("queryable_lag_ms_p99",
+               ("lineage_freshness", "derived", "queryable_lag_ms_p99"),
+               tol=0.5, floor=1000.0),
+    MetricSpec("ingest_lag_ms_p50",
+               ("lineage_freshness", "derived", "ingest_lag_ms_p50"),
+               tol=0.5, floor=500.0),
+    MetricSpec("lineage_overhead_pct",
+               ("lineage_overhead", "derived", "overhead_pct"),
+               tol=1.0, floor=3.0),
 )
 
 

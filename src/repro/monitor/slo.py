@@ -70,6 +70,17 @@ def default_slos(cpu_max: float = 0.55, theta2: float = 0.25,
                 budget=0.10,
                 description="consumer occupancy stays under the "
                             "Algorithm-2 escalation bound"),
+        # the metric is only produced on lineage-tracked runs
+        # (run_scenario(lineage=...)), so the spec is inert otherwise;
+        # tighter windows than the latency SLOs — a stalled watermark
+        # breaches consecutively, so a store outage should alert while
+        # the outage is still in progress, not a long-window later
+        SLOSpec("freshness", "queryable_lag_ms", "<=", 5000.0,
+                budget=0.15, short_window=6, long_window=24,
+                burn_alert=3.0,
+                description="the graph queries see is never more than "
+                            "5 s of stream time stale (queryable "
+                            "watermark lag; buffering rides the budget)"),
     ]
     if checkpoint_every > 0:
         slos.append(SLOSpec(

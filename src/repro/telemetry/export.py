@@ -26,8 +26,11 @@ def _tid(shard: Optional[int]) -> int:
     return 0 if shard is None else int(shard) + 1
 
 
-def chrome_trace(reg: TelemetryRegistry, meta: Optional[Dict] = None) -> Dict:
-    """The registry as a Chrome `trace_event` object (Perfetto-loadable)."""
+def chrome_trace(reg: TelemetryRegistry, meta: Optional[Dict] = None,
+                 extra_events: Optional[List[Dict]] = None) -> Dict:
+    """The registry as a Chrome `trace_event` object (Perfetto-loadable).
+    `extra_events` are appended verbatim — e.g. `repro.lineage` flow
+    events (``ph: s/t/f`` arrows) linking the spans a batch traversed."""
     root = reg._root
     t0 = root.t0_ns
     events: List[Dict] = []
@@ -59,6 +62,8 @@ def chrome_trace(reg: TelemetryRegistry, meta: Optional[Dict] = None) -> Dict:
                 **{k: v for k, v in rec.inputs.items()},
             },
         })
+    if extra_events:
+        events.extend(extra_events)
     out = {
         "traceEvents": events,
         "displayTimeUnit": "ms",
@@ -72,9 +77,10 @@ def chrome_trace(reg: TelemetryRegistry, meta: Optional[Dict] = None) -> Dict:
 
 
 def write_chrome_trace(reg: TelemetryRegistry, path: str,
-                       meta: Optional[Dict] = None) -> str:
+                       meta: Optional[Dict] = None,
+                       extra_events: Optional[List[Dict]] = None) -> str:
     with open(path, "w") as f:
-        json.dump(chrome_trace(reg, meta), f)
+        json.dump(chrome_trace(reg, meta, extra_events=extra_events), f)
     return path
 
 

@@ -85,6 +85,19 @@ class WorkloadReport:
     slo_alerts: int = 0          # multi-window burn-rate alert onsets
     controller_score: float = 1.0  # mean per-decision quality in [0,1]
     decision_quality: Dict = dataclasses.field(default_factory=dict)
+    # lineage / freshness (repro.lineage; inert defaults when off)
+    lineage_enabled: bool = False
+    ingest_lag_ms_p50: float = 0.0   # store staleness (stream-time ms)
+    ingest_lag_ms_p99: float = 0.0
+    queryable_lag_ms_p99: float = 0.0  # query-surface staleness
+    path_mix: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # final watermarks: {committed, queryable, max_event_t, pending_*}
+    watermark_final: Dict = dataclasses.field(default_factory=dict)
+    records_in: int = 0          # records that entered the buffer
+    records_committed: int = 0   # ... that landed in the store
+    records_dropped: int = 0     # ... terminally lost (lineage-observed)
+    records_in_flight: int = 0   # ... still buffered/spilled/archived
+    conservation_warning: str = ""  # non-empty iff the invariant broke
 
     @property
     def n_transitions(self) -> int:
@@ -117,7 +130,22 @@ class WorkloadReport:
                if self.dict_compress else "")
             + (self._stage_summary() if self.telemetry_enabled else "")
             + (self._monitor_summary() if self.monitor_enabled else "")
+            + (self._lineage_summary() if self.lineage_enabled else "")
         )
+
+    def _lineage_summary(self) -> str:
+        mix = " ".join(f"{k}={v}" for k, v in sorted(self.path_mix.items()))
+        wq = self.watermark_final.get("queryable")
+        warn = f" | WARNING: {self.conservation_warning}" \
+            if self.conservation_warning else ""
+        return (f"\nlineage: {self.records_in} in -> "
+                f"{self.records_committed} committed, "
+                f"{self.records_dropped} dropped, "
+                f"{self.records_in_flight} in flight | "
+                f"lag p50={self.ingest_lag_ms_p50:.0f}ms "
+                f"query_p99={self.queryable_lag_ms_p99:.0f}ms | "
+                f"paths: {mix or '-'} | Wq="
+                + (f"{wq:.1f}" if wq is not None else "-") + warn)
 
     def _monitor_summary(self) -> str:
         onset = f"burst_onset_tick={self.burst_onset_tick}" \
@@ -174,8 +202,10 @@ def run_scenario(
     on_event=None,
     telemetry=None,
     monitor=None,
+    lineage=None,
     trace: Optional[str] = None,
     trace_jsonl: Optional[str] = None,
+    lineage_jsonl: Optional[str] = None,
     fault_plan=None,
     retry=None,
     checkpoint_dir: Optional[str] = None,
@@ -205,6 +235,16 @@ def run_scenario(
     budget/burn summary, and the controller decision-quality score
     (`controller_score`); every audit record gains its `quality`
     verdict in place.
+
+    `lineage` turns on event-time watermarks + per-batch provenance
+    (repro.lineage; pass True, or a `LineageTracker` to keep for
+    inspection).  The report then carries the freshness SLIs
+    (`ingest_lag_ms_p50/p99`, `queryable_lag_ms_p99`), the commit
+    path mix, the final watermarks, and the record-conservation
+    counters (with `conservation_warning` set iff the invariant
+    ``records_in == committed + dropped + in_flight`` broke).  With
+    `trace` also set, the Chrome trace gains per-batch flow events;
+    `lineage_jsonl` writes the sampled hop logs (implies lineage).
 
     Resilience (repro.resilience): `fault_plan` injects commit faults
     (and, via `crash_at_tick`, raises `PipelineKilled` mid-run);
@@ -258,6 +298,12 @@ def run_scenario(
                 cpu_max=cfg.cpu_max, theta2=cfg.theta2,
                 checkpoint_every=checkpoint_every
                 if checkpoint_dir is not None else 0))
+    trk = None
+    if lineage or lineage_jsonl:
+        from repro.lineage import LineageTracker
+
+        trk = lineage if isinstance(lineage, LineageTracker) \
+            else LineageTracker(dt=float(src.dt))
 
     sdir = spill_dir or f"/tmp/repro_workload_{scn.name}_{seed}"
     b = (PipelineBuilder(cfg)
@@ -269,6 +315,8 @@ def run_scenario(
         b = b.with_telemetry(reg)
     if mon is not None:
         b = b.with_monitor(mon)
+    if trk is not None:
+        b = b.with_lineage(trk)
     if sketch_guided:
         b = b.sketch_guided()
     if dict_compress:
@@ -354,6 +402,29 @@ def run_scenario(
         # already carries its quality verdict in the trace files
         mon.finish()
         mon_report = mon.report()
+    lineage_lags: Dict[str, float] = {}
+    cons: Dict = {}
+    cons_warning = ""
+    if trk is not None:
+        # conservation: whatever is still sitting in the stage buffers
+        # and spill files is accounted in-flight, not lost
+        stages = pipe.shards if shards > 1 else [pipe.buffer_stage]
+        buffered = sum(len(st.buffer) + st.spilled_records for st in stages)
+        cons = trk.conservation(buffered_records=buffered)
+        if cons["imbalance"]:
+            cons_warning = (f"record conservation broke: in="
+                            f"{cons['records_in']} != committed="
+                            f"{cons['records_committed']} + dropped="
+                            f"{cons['records_dropped']} + in_flight="
+                            f"{cons['records_in_flight']} "
+                            f"(imbalance {cons['imbalance']:+d})")
+        lineage_lags = trk.lag_percentiles_ms()
+        if lineage_jsonl:
+            from repro.lineage import write_lineage_jsonl
+
+            write_lineage_jsonl(trk, lineage_jsonl, meta={
+                "scenario": scn.name, "seed": seed, "shards": shards,
+                "conservation_warning": cons_warning})
     stage_latency: Dict[str, Dict[str, float]] = {}
     n_audit = 0
     if reg is not None:
@@ -362,8 +433,14 @@ def run_scenario(
         stage_latency = reg.summary()
         n_audit = len(reg.audit)
         if trace:
+            extra = None
+            if trk is not None:
+                from repro.lineage import flow_events
+
+                extra = flow_events(trk, reg.t0_ns)
             write_chrome_trace(reg, trace, meta={
-                "scenario": scn.name, "seed": seed, "shards": shards})
+                "scenario": scn.name, "seed": seed, "shards": shards},
+                extra_events=extra)
         if trace_jsonl:
             write_jsonl(reg, trace_jsonl)
     return WorkloadReport(
@@ -418,4 +495,15 @@ def run_scenario(
         slo_alerts=mon_report.get("slo_alerts", 0),
         controller_score=mon_report.get("controller_score", 1.0),
         decision_quality=mon_report.get("quality", {}),
+        lineage_enabled=trk is not None,
+        ingest_lag_ms_p50=lineage_lags.get("ingest_lag_ms_p50", 0.0),
+        ingest_lag_ms_p99=lineage_lags.get("ingest_lag_ms_p99", 0.0),
+        queryable_lag_ms_p99=lineage_lags.get("queryable_lag_ms_p99", 0.0),
+        path_mix=dict(trk.path_counts) if trk is not None else {},
+        watermark_final=trk.watermarks() if trk is not None else {},
+        records_in=cons.get("records_in", 0),
+        records_committed=cons.get("records_committed", 0),
+        records_dropped=cons.get("records_dropped", 0),
+        records_in_flight=cons.get("records_in_flight", 0),
+        conservation_warning=cons_warning,
     )
